@@ -1,0 +1,38 @@
+"""Table 4: decode latency across the 19 decode workloads.
+
+Systems: Bebop (plan-compiled FastStructDecoder), our protobuf-style varint
+baseline (pure Python — labeled), msgpack (C extension).  The derived field
+is the Bebop-vs-varint speedup; msgpack gives a compiled-baseline anchor.
+"""
+from __future__ import annotations
+
+import msgpack
+
+from repro.core import varint, wire
+from repro.core.fastwire import FastStructDecoder
+from .timing import bench
+from .workloads import DECODE_SET, WORKLOADS
+
+
+def run(quick: bool = False):
+    rows = []
+    names = DECODE_SET[:6] if quick else DECODE_SET
+    for name in names:
+        w = WORKLOADS[name]
+        bebop_buf = wire.encode(w.schema, w.value)
+        varint_buf = varint.encode(w.schema, w.value)
+        mp_buf = msgpack.packb(w.py_value(), use_bin_type=True)
+
+        dec = FastStructDecoder(w.schema)
+        t_bebop, cv_b = bench(lambda: dec.decode(bebop_buf))
+        t_varint, cv_v = bench(lambda: varint.decode(w.schema, varint_buf))
+        t_mp, cv_m = bench(lambda: msgpack.unpackb(mp_buf, raw=False))
+
+        speedup = t_varint / t_bebop if t_bebop else 0.0
+        rows.append((f"decode.{name}.bebop", t_bebop * 1e6,
+                     f"speedup_vs_varint={speedup:.1f}x cv={cv_b:.3f}"))
+        rows.append((f"decode.{name}.varint", t_varint * 1e6,
+                     f"cv={cv_v:.3f}"))
+        rows.append((f"decode.{name}.msgpack", t_mp * 1e6,
+                     f"bebop_vs_msgpack={t_mp / t_bebop:.1f}x cv={cv_m:.3f}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Table 6: JSON parsing vs Bebop decode on equivalent data.
+
+simdjson is unavailable offline; we use orjson (fast C JSON parser) and
+label it.  Same caveat as the paper: not apples-to-apples — JSON parses
+text; Bebop decodes binary.  The gap on numeric arrays is the point.
+"""
+from __future__ import annotations
+
+import orjson
+
+from repro.core import wire
+from repro.core.fastwire import FastStructDecoder
+from .timing import bench
+from .workloads import WORKLOADS
+
+_SET = ["TensorShardLarge", "Embedding1536", "EmbeddingBatch",
+        "Embedding768", "InferenceResponse", "OrderLarge", "DocumentLarge",
+        "LLMChunkLarge", "TreeDeep", "JsonSmall", "JsonLarge"]
+
+
+def run(quick: bool = False):
+    rows = []
+    for name in (_SET[:4] if quick else _SET):
+        w = WORKLOADS[name]
+        bebop_buf = wire.encode(w.schema, w.value)
+        json_buf = orjson.dumps(w.py_value())
+        dec = FastStructDecoder(w.schema)
+        t_bebop, _ = bench(lambda: dec.decode(bebop_buf))
+        t_json, _ = bench(lambda: orjson.loads(json_buf))
+        rows.append((f"json.{name}.bebop", t_bebop * 1e6,
+                     f"speedup_vs_orjson={t_json / t_bebop:.1f}x"))
+        rows.append((f"json.{name}.orjson", t_json * 1e6,
+                     f"json_bytes={len(json_buf)}"))
+    return rows

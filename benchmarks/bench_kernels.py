@@ -1,0 +1,74 @@
+"""Kernel-layer benchmarks (CPU container: interpret-mode correctness cost
+and the jnp reference path the dry-run lowers; TPU wall-clock comes from the
+roofline analysis, not from this host).
+
+The meaningful host-side number is the on-device-decode REFERENCE path
+(bitcast chain under jit) vs host numpy decode: both are branchless; the
+kernel exists so the same transformation runs on the accelerator without
+host round trips.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fastwire, types as T
+from repro.kernels import ref
+from .timing import bench
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    n, seq = 256, 1024
+    stride = 16 + 4 * (seq + 1)
+    pages = rng.integers(0, 255, (n, stride), dtype=np.uint8)
+    dev_pages = jnp.asarray(pages)
+
+    decode_jit = jax.jit(lambda p: ref.bytes_to_u32(p, 16, seq + 1))
+    decode_jit(dev_pages).block_until_ready()
+
+    t_dev, cv = bench(lambda: decode_jit(dev_pages).block_until_ready())
+    total = pages.nbytes
+    rows.append(("kernels.device_decode_u32.jit", t_dev * 1e6,
+                 f"GBps={total / t_dev / 1e9:.2f} cv={cv:.3f}"))
+
+    s = T.Struct("Ex", [T.Field("doc_id", T.UUID),
+                        T.Field("tokens", T.FixedArray(T.UINT32, seq + 1))])
+    blob = pages.tobytes()
+
+    def host_decode():
+        return fastwire.batch_decode_fixed(s, blob, n)["tokens"]
+
+    t_host, cv2 = bench(host_decode)
+    rows.append(("kernels.host_decode_u32.numpy", t_host * 1e6,
+                 f"GBps={total / t_host / 1e9:.2f} cv={cv2:.3f}"))
+
+    # bf16 -> f32 upcast decode (the embedding path)
+    dim = 1536
+    stride2 = 16 + 2 * dim
+    pages2 = rng.integers(0, 255, (n, stride2), dtype=np.uint8)
+    dev2 = jnp.asarray(pages2)
+    bf16_jit = jax.jit(lambda p: ref.bytes_to_bf16(p, 16, dim))
+    bf16_jit(dev2).block_until_ready()
+    t_bf, _ = bench(lambda: bf16_jit(dev2).block_until_ready())
+    rows.append(("kernels.device_decode_bf16.jit", t_bf * 1e6,
+                 f"GBps={pages2.nbytes / t_bf / 1e9:.2f}"))
+
+    if not quick:
+        # flash attention interpret-mode vs reference (correctness cost only)
+        q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+        from repro.kernels.flash_attention import flash_attention
+        t_fa, _ = bench(lambda: flash_attention(
+            q, k, v, block_q=64, block_k=64,
+            interpret=True).block_until_ready(), min_time_s=0.2, repeats=3,
+            max_iters=50)
+        t_ref, _ = bench(lambda: jax.jit(ref.attention)(
+            q, k, v).block_until_ready(), min_time_s=0.2, repeats=3)
+        rows.append(("kernels.flash_attn.interpret", t_fa * 1e6,
+                     "mode=interpret(correctness only)"))
+        rows.append(("kernels.flash_attn.reference_jit", t_ref * 1e6, ""))
+    return rows

@@ -1,0 +1,41 @@
+"""Table 7: roundtrip (encode + decode) latency."""
+from __future__ import annotations
+
+import msgpack
+
+from repro.core import varint, wire
+from repro.core.fastwire import FastStructDecoder
+from .timing import bench
+from .workloads import WORKLOADS
+
+_SET = ["PersonSmall", "OrderLarge", "EventLarge", "TreeDeep",
+        "Embedding1536", "TensorShardLarge"]
+
+
+def run(quick: bool = False):
+    rows = []
+    for name in (_SET[:3] if quick else _SET):
+        w = WORKLOADS[name]
+        dec = FastStructDecoder(w.schema)
+
+        def rt_bebop():
+            return dec.decode(wire.encode(w.schema, w.value))
+
+        def rt_varint():
+            return varint.decode(w.schema, varint.encode(w.schema, w.value))
+
+        pv = w.py_value()
+
+        def rt_msgpack():
+            return msgpack.unpackb(
+                msgpack.packb(pv, use_bin_type=True), raw=False)
+
+        t_b, _ = bench(rt_bebop)
+        t_v, _ = bench(rt_varint)
+        t_m, _ = bench(rt_msgpack)
+        rows.append((f"roundtrip.{name}.bebop", t_b * 1e6,
+                     f"speedup_vs_varint={t_v / t_b:.1f}x"))
+        rows.append((f"roundtrip.{name}.varint", t_v * 1e6, ""))
+        rows.append((f"roundtrip.{name}.msgpack", t_m * 1e6,
+                     f"bebop_vs_msgpack={t_m / t_b:.1f}x"))
+    return rows

@@ -1,0 +1,37 @@
+"""Eq. 1 / Figure 1: expected varint size vs fixed width, and the decode
+latency asymmetry (branch-per-byte vs single load) measured directly."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import types as T, varint, wire
+from repro.core.fastwire import FastStructDecoder
+from .timing import bench
+
+
+def run(quick: bool = False):
+    rows = []
+    # Eq. 1: expected bytes for uniform [0, N]
+    for exp in ([7, 21, 28, 32] if not quick else [7, 28]):
+        n = 2 ** exp - 1
+        e = varint.expected_varint_bytes_uniform(n)
+        rows.append((f"varint_model.E_bytes.N=2^{exp}", 0.0,
+                     f"varint={e:.3f} fixed=4"))
+    # decode latency: 1024 uniform u32 values, varint vs fixed-width
+    rng = np.random.default_rng(0)
+    for label, hi in [("small(<128)", 127), ("mixed", 2 ** 28),
+                      ("large", 2 ** 32 - 1)]:
+        vals = rng.integers(0, hi, 1024, dtype=np.uint64).astype(object)
+        arr_t = T.Struct("A", [T.Field("v", T.Array(T.UINT32))])
+        value = {"v": np.asarray(vals, dtype="<u4")}
+        vbuf = varint.encode(arr_t, value)
+        bbuf = wire.encode(arr_t, value)
+        dec = FastStructDecoder(arr_t)
+        t_v, _ = bench(lambda: varint.decode(arr_t, vbuf))
+        t_b, _ = bench(lambda: dec.decode(bbuf))
+        rows.append((f"varint_model.decode1024.{label}.varint", t_v * 1e6,
+                     f"wire_bytes={len(vbuf)}"))
+        rows.append((f"varint_model.decode1024.{label}.bebop", t_b * 1e6,
+                     f"wire_bytes={len(bbuf)} "
+                     f"speedup={t_v / t_b:.1f}x"))
+    return rows

@@ -1,0 +1,34 @@
+"""Table 8: wire size with and without compression.
+
+The paper's predictions to confirm: fixed-width loses on small-int API
+payloads (OrderLarge), is competitive on ML payloads, and compression
+(zstd here; brotli unavailable — labeled) pulls the formats within ~2% on
+bf16-dominated data.
+"""
+from __future__ import annotations
+
+import msgpack
+import orjson
+import zstandard
+
+from repro.core import varint, wire
+from .workloads import WORKLOADS
+
+_SET = ["PersonSmall", "PersonMedium", "OrderSmall", "OrderLarge",
+        "EventSmall", "EventLarge", "Embedding768", "Embedding1536",
+        "TensorShardSmall", "TensorShardLarge"]
+
+
+def run(quick: bool = False):
+    rows = []
+    cctx = zstandard.ZstdCompressor(level=11)
+    for name in (_SET[:5] if quick else _SET):
+        w = WORKLOADS[name]
+        b = wire.encode(w.schema, w.value)
+        v = varint.encode(w.schema, w.value)
+        m = msgpack.packb(w.py_value(), use_bin_type=True)
+        bz, vz, mz = (len(cctx.compress(x)) for x in (b, v, m))
+        rows.append((f"wiresize.{name}", 0.0,
+                     f"bebop={len(b)} varint={len(v)} msgpack={len(m)} "
+                     f"bebop_zstd={bz} varint_zstd={vz} msgpack_zstd={mz}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Benchmark aggregator — one module per paper table.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` runs a reduced set
+(CI); the full run reproduces every table in EXPERIMENTS.md.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes "
+                         "(decode,throughput,json,roundtrip,wiresize,"
+                         "varint_model,rpc,kernels)")
+    args = ap.parse_args()
+
+    from . import (bench_decode, bench_json, bench_kernels, bench_roundtrip,
+                   bench_rpc, bench_throughput, bench_varint_model,
+                   bench_wiresize)
+    modules = {
+        "decode": bench_decode,          # Table 4
+        "throughput": bench_throughput,  # Table 5 / Fig 3
+        "json": bench_json,              # Table 6
+        "roundtrip": bench_roundtrip,    # Table 7
+        "wiresize": bench_wiresize,      # Table 8 / Fig 2
+        "varint_model": bench_varint_model,  # Eq 1 / Fig 1
+        "rpc": bench_rpc,                # §7.3 / §7.6
+        "kernels": bench_kernels,        # device decode layer
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for key, mod in modules.items():
+        if only is not None and key not in only:
+            continue
+        try:
+            rows = mod.run(quick=args.quick)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{key}.ERROR,0,{e!r}", flush=True)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

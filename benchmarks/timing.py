@@ -1,0 +1,42 @@
+"""Timing harness: adaptive iteration counts, repeats, CV reporting."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import numpy as np
+
+
+def bench(fn: Callable[[], object], *, min_time_s: float = 0.05,
+          repeats: int = 5, max_iters: int = 200_000) -> Tuple[float, float]:
+    """Returns (mean seconds/call, coefficient of variation)."""
+    fn()  # warmup / JIT / caches
+    # calibrate
+    iters = 1
+    while iters < max_iters:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        dt = time.perf_counter() - t0
+        if dt >= min_time_s / 2:
+            break
+        iters = min(iters * 4, max_iters)
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        samples.append((time.perf_counter() - t0) / iters)
+    mean = float(np.mean(samples))
+    cv = float(np.std(samples) / mean) if mean else 0.0
+    return mean, cv
+
+
+def fmt_time(seconds: float) -> str:
+    if seconds < 1e-6:
+        return f"{seconds * 1e9:.1f} ns"
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:.2f} us"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:.2f} ms"
+    return f"{seconds:.3f} s"

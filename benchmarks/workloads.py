@@ -1,0 +1,324 @@
+"""The paper's benchmark workloads (Table 3): 23 schemas, five categories.
+
+Each workload provides:
+  * ``schema``   — the Bebop type (our DSL)
+  * ``value``    — a representative value (deterministic)
+  * ``py_value`` — plain-python equivalent for msgpack / JSON baselines
+"""
+from __future__ import annotations
+
+import dataclasses
+import uuid as _uuid
+from typing import Any, Callable, Dict, List
+
+import numpy as np
+
+from repro.core import types as T
+
+RNG = np.random.default_rng(42)
+
+
+def _uuid_n(n: int) -> _uuid.UUID:
+    return _uuid.UUID(int=(0x1234567890ABCDEF << 64) | n)
+
+
+# --------------------------------------------------------------------------
+# schema definitions
+# --------------------------------------------------------------------------
+
+Embedding = T.Struct("Embedding", [
+    T.Field("id", T.UUID),
+    T.Field("vector", T.Array(T.BFLOAT16)),
+])
+
+EmbeddingBatch = T.Struct("EmbeddingBatch", [
+    T.Field("model", T.STRING),
+    T.Field("embeddings", T.Array(Embedding)),
+])
+
+TensorShard = T.Struct("TensorShard", [
+    T.Field("id", T.UUID),
+    T.Field("layer", T.UINT32),
+    T.Field("offset", T.UINT64),
+    T.Field("shape", T.Array(T.UINT32)),
+    T.Field("data", T.Array(T.BFLOAT16)),
+])
+
+InferenceResponse = T.Message("InferenceResponse", [
+    T.Field("request_id", T.UUID, tag=1),
+    T.Field("model", T.STRING, tag=2),
+    T.Field("created", T.TIMESTAMP, tag=3),
+    T.Field("prompt_tokens", T.UINT32, tag=4),
+    T.Field("completion_tokens", T.UINT32, tag=5),
+    T.Field("embeddings", T.Array(Embedding), tag=6),
+])
+
+LLMChunk = T.Struct("LLMChunk", [
+    T.Field("request_id", T.UUID),
+    T.Field("index", T.UINT32),
+    T.Field("tokens", T.Array(T.UINT32)),
+    T.Field("logprobs", T.Array(T.BFLOAT16)),
+    T.Field("text", T.STRING),
+])
+
+Span = T.Struct("Span", [
+    T.Field("start", T.UINT32),
+    T.Field("end", T.UINT32),
+    T.Field("kind", T.UINT8),
+])
+
+ChunkedText = T.Struct("ChunkedText", [
+    T.Field("text", T.STRING),
+    T.Field("spans", T.Array(Span)),
+])
+
+Event = T.Struct("Event", [
+    T.Field("id", T.UUID),
+    T.Field("ts", T.TIMESTAMP),
+    T.Field("kind", T.UINT16),
+    T.Field("payload", T.Array(T.BYTE)),
+])
+
+Person = T.Message("Person", [
+    T.Field("id", T.UUID, tag=1),
+    T.Field("name", T.STRING, tag=2),
+    T.Field("email", T.STRING, tag=3),
+    T.Field("age", T.UINT8, tag=4),
+    T.Field("tags", T.Array(T.STRING), tag=5),
+    T.Field("scores", T.Array(T.INT32), tag=6),
+])
+
+OrderItem = T.Struct("OrderItem", [
+    T.Field("sku", T.UINT32),
+    T.Field("quantity", T.UINT16),
+    T.Field("price_cents", T.INT32),
+])
+
+Order = T.Message("Order", [
+    T.Field("id", T.UUID, tag=1),
+    T.Field("created", T.TIMESTAMP, tag=2),
+    T.Field("items", T.Array(OrderItem), tag=3),
+    T.Field("quantities", T.Array(T.INT32), tag=4),
+    T.Field("total_cents", T.INT64, tag=5),
+])
+
+Document = T.Message("Document", [
+    T.Field("id", T.UUID, tag=1),
+    T.Field("title", T.STRING, tag=2),
+    T.Field("body", T.STRING, tag=3),
+    T.Field("refs", T.Array(T.STRING), tag=4),
+])
+Document.fields.append(T.Field("children", T.Array(Document), tag=5))
+
+TreeNode = T.Message("TreeNode", [
+    T.Field("value", T.INT32, tag=1),
+])
+TreeNode.fields.append(T.Field("children", T.Array(TreeNode), tag=2))
+
+# JsonValue: union over JSON-ish types (paper: "Union for JSON types")
+JsonValue = T.Union("JsonValue", [])
+_JsonArray = T.Struct("JsonArray", [T.Field("items", T.Array(JsonValue))])
+_JsonObjEntry = T.Struct("JsonObjEntry", [T.Field("key", T.STRING),
+                                          T.Field("value", JsonValue)])
+_JsonObject = T.Struct("JsonObject",
+                       [T.Field("entries", T.Array(_JsonObjEntry))])
+JsonValue.branches.extend([
+    T.Branch("Null", 0, T.Struct("JsonNull", [])),
+    T.Branch("Bool", 1, T.Struct("JsonBool", [T.Field("v", T.BOOL)])),
+    T.Branch("Num", 2, T.Struct("JsonNum", [T.Field("v", T.FLOAT64)])),
+    T.Branch("Str", 3, T.Struct("JsonStr", [T.Field("v", T.STRING)])),
+    T.Branch("Arr", 4, _JsonArray),
+    T.Branch("Obj", 5, _JsonObject),
+])
+
+
+# --------------------------------------------------------------------------
+# value builders
+# --------------------------------------------------------------------------
+
+
+def _bf16_vec(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n).astype(np.float32)
+
+
+def embedding_value(dim: int, n: int = 0) -> dict:
+    return {"id": _uuid_n(n), "vector": _bf16_vec(dim, n)}
+
+
+def _tree(depth: int, branching: int, counter=None) -> dict:
+    counter = counter if counter is not None else [0]
+    counter[0] += 1
+    node = {"value": counter[0]}
+    if depth > 1:
+        node["children"] = [_tree(depth - 1, branching, counter)
+                            for _ in range(branching)]
+    else:
+        node["children"] = []
+    return node
+
+
+def _json_obj(n_keys: int, depth: int) -> T.UnionValue:
+    entries = []
+    for i in range(n_keys):
+        if depth > 0 and i % 3 == 0:
+            v = _json_obj(max(n_keys // 2, 1), depth - 1)
+        elif i % 3 == 1:
+            v = T.UnionValue(2, "Num", {"v": i * 1.5})
+        else:
+            v = T.UnionValue(3, "Str", {"v": f"value-{i}"})
+        entries.append({"key": f"key_{i}", "value": v})
+    return T.UnionValue(5, "Obj", {"entries": entries})
+
+
+def _py(v: Any) -> Any:
+    """Bebop value -> plain python (for msgpack / JSON baselines)."""
+    if isinstance(v, dict):
+        return {k: _py(x) for k, x in v.items()}
+    if isinstance(v, T.UnionValue):
+        return {"$type": v.name, **(_py(v.value) if isinstance(v.value, dict)
+                                    else {"v": _py(v.value)})}
+    if isinstance(v, np.ndarray):
+        if v.dtype.kind == "f":
+            return [float(x) for x in np.asarray(v, np.float64)]
+        return [int(x) for x in v]
+    if isinstance(v, (list, tuple)):
+        return [_py(x) for x in v]
+    if isinstance(v, _uuid.UUID):
+        return str(v)
+    if isinstance(v, T.Timestamp):
+        return {"sec": v.sec, "ns": v.ns, "offset_ms": v.offset_ms}
+    if isinstance(v, T.Duration):
+        return {"sec": v.sec, "ns": v.ns}
+    if isinstance(v, (bytes, bytearray)):
+        return list(v)
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    return v
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    category: str
+    schema: T.Type
+    value: Any
+    in_decode_set: bool = True  # Table 4's 19 decode workloads
+
+    _py_cache: Any = None
+
+    def py_value(self):
+        if self._py_cache is None:
+            self._py_cache = _py(self.value)
+        return self._py_cache
+
+
+def build_workloads() -> Dict[str, Workload]:
+    ts = T.Timestamp(1_700_000_000, 123_456_789, 0)
+    payload_small = bytes(RNG.integers(0, 255, 24, dtype=np.uint8))
+    payload_large = bytes(RNG.integers(0, 255, 4096, dtype=np.uint8))
+    w: List[Workload] = [
+        # -- ML inference ----------------------------------------------------
+        Workload("Embedding768", "ml", Embedding, embedding_value(768)),
+        Workload("Embedding1536", "ml", Embedding, embedding_value(1536)),
+        Workload("EmbeddingBatch", "ml", EmbeddingBatch,
+                 {"model": "text-embed-3",
+                  "embeddings": [embedding_value(768, i) for i in range(32)]}),
+        Workload("TensorShardSmall", "ml", TensorShard,
+                 {"id": _uuid_n(1), "layer": 7, "offset": 1 << 20,
+                  "shape": np.asarray([32, 32], "<u4"),
+                  "data": _bf16_vec(1024, 1)}, in_decode_set=False),
+        Workload("TensorShardLarge", "ml", TensorShard,
+                 {"id": _uuid_n(2), "layer": 11, "offset": 1 << 24,
+                  "shape": np.asarray([256, 128], "<u4"),
+                  "data": _bf16_vec(32768, 2)}),  # 64 KB of bf16
+        Workload("InferenceResponse", "ml", InferenceResponse,
+                 {"request_id": _uuid_n(3), "model": "repro-7b",
+                  "created": ts, "prompt_tokens": 128,
+                  "completion_tokens": 64,
+                  "embeddings": [embedding_value(256, 10 + i)
+                                 for i in range(4)]}),
+        # -- LLM streaming ----------------------------------------------------
+        Workload("LLMChunkSmall", "llm", LLMChunk,
+                 {"request_id": _uuid_n(4), "index": 3,
+                  "tokens": np.arange(8, dtype="<u4"),
+                  "logprobs": _bf16_vec(8, 3),
+                  "text": "hello world, this is a token chunk"},
+                 in_decode_set=False),
+        Workload("LLMChunkLarge", "llm", LLMChunk,
+                 {"request_id": _uuid_n(5), "index": 17,
+                  "tokens": RNG.integers(0, 2**17, 512).astype("<u4"),
+                  "logprobs": _bf16_vec(512, 4),
+                  "text": "x" * 2048}),
+        Workload("ChunkedText", "llm", ChunkedText,
+                 {"text": ("lorem ipsum dolor sit amet " * 400),
+                  "spans": [{"start": 27 * i, "end": 27 * i + 26,
+                             "kind": i % 5} for i in range(400)]}),
+        # -- event telemetry --------------------------------------------------
+        Workload("EventSmall", "event", Event,
+                 {"id": _uuid_n(6), "ts": ts, "kind": 3,
+                  "payload": payload_small}),
+        Workload("EventLarge", "event", Event,
+                 {"id": _uuid_n(7), "ts": ts, "kind": 9,
+                  "payload": payload_large}),
+        # -- API payloads -------------------------------------------------------
+        Workload("PersonSmall", "api", Person,
+                 {"id": _uuid_n(8), "name": "Ada"}),
+        Workload("PersonMedium", "api", Person,
+                 {"id": _uuid_n(9), "name": "Ada Lovelace",
+                  "email": "ada@analytical.engine", "age": 36,
+                  "tags": ["math", "pioneer"],
+                  "scores": [1, 12, 123, 1234, 12345]}),
+        Workload("PersonLarge", "api", Person,
+                 {"id": _uuid_n(10), "name": "Ada Lovelace",
+                  "email": "ada@analytical.engine", "age": 36,
+                  "tags": [f"tag-{i}" for i in range(24)],
+                  "scores": list(range(64))}, in_decode_set=False),
+        Workload("OrderSmall", "api", Order,
+                 {"id": _uuid_n(11), "created": ts,
+                  "items": [{"sku": 101, "quantity": 2,
+                             "price_cents": 1999}],
+                  "quantities": [2], "total_cents": 3998}),
+        Workload("OrderLarge", "api", Order,
+                 {"id": _uuid_n(12), "created": ts,
+                  "items": [{"sku": 100 + i, "quantity": (i % 7) + 1,
+                             "price_cents": 99 + i} for i in range(40)],
+                  # arrays of 100 small integers: varint's best case (§4.8)
+                  "quantities": [(i % 9) + 1 for i in range(100)],
+                  "total_cents": 123456}),
+        Workload("DocumentSmall", "api", Document,
+                 {"id": _uuid_n(13), "title": "Readme",
+                  "body": "Short body.", "refs": ["a", "b"],
+                  "children": []}),
+        Workload("DocumentMedium", "api", Document,
+                 {"id": _uuid_n(14), "title": "Design",
+                  "body": "Medium body. " * 20,
+                  "refs": [f"ref-{i}" for i in range(8)],
+                  "children": [
+                      {"id": _uuid_n(15), "title": "child",
+                       "body": "c", "refs": [], "children": []}]},
+                 in_decode_set=False),
+        Workload("DocumentLarge", "api", Document,
+                 {"id": _uuid_n(16), "title": "Spec",
+                  "body": "Long body paragraph. " * 64,
+                  "refs": [f"ref-{i}" for i in range(32)],
+                  "children": [
+                      {"id": _uuid_n(17 + i), "title": f"s{i}",
+                       "body": "section body " * 8,
+                       "refs": [f"r{i}"], "children": []}
+                      for i in range(8)]}),
+        # -- recursive ---------------------------------------------------------
+        Workload("TreeDeep", "recursive", TreeNode, _tree(10, 2)),  # 1023
+        Workload("TreeWide", "recursive", TreeNode, _tree(2, 100)),
+        Workload("JsonSmall", "recursive", JsonValue, _json_obj(4, 1)),
+        Workload("JsonLarge", "recursive", JsonValue, _json_obj(24, 3)),
+    ]
+    return {x.name: x for x in w}
+
+
+WORKLOADS = build_workloads()
+DECODE_SET = [w.name for w in WORKLOADS.values() if w.in_decode_set]
+assert len(DECODE_SET) == 19, len(DECODE_SET)
+assert len(WORKLOADS) == 23, len(WORKLOADS)

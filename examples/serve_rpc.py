@@ -1,0 +1,103 @@
+"""Serving demo: every §7 protocol feature against a live model.
+
+    PYTHONPATH=src python examples/serve_rpc.py
+
+  1. unary Generate
+  2. batch pipelining — Tokenize -> Generate -> Score in ONE round trip
+  3. cursor-resumable token streaming (simulated disconnect)
+  4. futures: dispatch long generation, push-based resolve, idempotency
+  5. deadline propagation sheds expired work
+"""
+import time
+import uuid
+
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core import wire
+from repro.core.rpc import Channel, Deadline, RpcError, Status, TcpTransport
+from repro.serving import Engine, ServeConfig, build_server
+from repro.serving.service import (GenerateRequest, GenerateResponse,
+                                   InferenceService, ScoreResponse,
+                                   TokenChunk, TokenizeRequest)
+
+
+def main() -> None:
+    cfg = reduced_config(get_config("gemma-2b"))
+    engine = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=16))
+    server = build_server(engine)
+    host, port, lsock = server.listen_tcp()
+    print(f"serving {cfg.name} at {host}:{port} over Bebop-RPC/TCP")
+    ch = Channel(TcpTransport.connect(host, port))
+    inf = ch.typed(InferenceService)
+
+    prompt = np.arange(8, dtype=np.uint32) % cfg.vocab_size
+
+    # 1. unary
+    t0 = time.perf_counter()
+    res = inf.Generate({"tokens": prompt, "batch": 1, "seq_len": 8,
+                        "max_new_tokens": 6})
+    print(f"[unary] {res['new_tokens']} tokens in "
+          f"{1e3 * (time.perf_counter() - t0):.1f} ms: "
+          f"{list(res['tokens'])}")
+
+    # 2. batch pipelining: 3 dependent calls, one round trip (§7.3)
+    tid = InferenceService.method("Tokenize").id
+    gid = InferenceService.method("Generate").id
+    sid = InferenceService.method("Score").id
+    t0 = time.perf_counter()
+    batch = ch.batch([
+        {"method_id": tid, "payload": wire.encode(
+            TokenizeRequest, {"text": "simplicity scales", "seq_len": 8})},
+        {"method_id": gid, "input_from": 0},
+        {"method_id": sid, "input_from": 1},
+    ])
+    dt = 1e3 * (time.perf_counter() - t0)
+    score = wire.decode(ScoreResponse, batch[2]["payload"])["scores"][0]
+    print(f"[batch] tokenize->generate->score in {dt:.1f} ms "
+          f"(1 round trip); score={score:.3f}")
+
+    # 3. cursor-resumable stream (§7.5): drop after 2 chunks, reconnect
+    sid_stream = InferenceService.method("Stream").id
+    req = wire.encode(GenerateRequest, {"tokens": prompt, "batch": 1,
+                                        "seq_len": 8, "max_new_tokens": 6})
+    got, cursor = [], 0
+    for item in ch.call(sid_stream, req, server_stream=True):
+        chunk = wire.decode(TokenChunk, item.payload)
+        got.extend(int(x) for x in chunk["tokens"])
+        cursor = item.cursor
+        if chunk["index"] == 1:
+            print(f"[stream] ...connection drops at cursor={cursor}")
+            break
+    for item in ch.call(sid_stream, req, server_stream=True, cursor=cursor):
+        got.extend(int(x) for x in
+                   wire.decode(TokenChunk, item.payload)["tokens"])
+    print(f"[stream] resumed; full stream: {got}")
+
+    # 4. futures (§7.6)
+    key = uuid.uuid4()
+    h = ch.dispatch_future(gid, req, idempotency_key=key)
+    print(f"[future] dispatched {h['id']} (existing={h['existing']})")
+    h2 = ch.dispatch_future(gid, req, idempotency_key=key)
+    print(f"[future] retried with same key -> same handle: "
+          f"{h2['id'] == h['id']}")
+    for res in ch.resolve_futures([h["id"]]):
+        out = wire.decode(GenerateResponse, res["payload"])
+        print(f"[future] push-resolved: status={Status.name(res['status'])} "
+              f"{out['new_tokens']} tokens")
+
+    # 5. deadlines (§7.4)
+    try:
+        inf.Generate({"tokens": prompt, "batch": 1, "seq_len": 8,
+                      "max_new_tokens": 4}, deadline=Deadline.after(-1))
+    except RpcError as e:
+        print(f"[deadline] expired work shed before prefill: "
+              f"{Status.name(e.code)}")
+
+    ch.close()
+    lsock.close()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

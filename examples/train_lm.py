@@ -1,0 +1,69 @@
+"""End-to-end training driver: Bebop data pages -> pipeline -> train loop
+-> checkpoints -> restart.
+
+Default: a ~20M-parameter qwen2-family model for 300 steps (a few minutes
+on CPU).  `--hundred-m` trains a ~100M-parameter config for --steps steps
+(the assignment's full driver; give it time or a TPU).
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --hundred-m --steps 300
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_config, reduced_config
+from repro.data import (BufferSource, DataConfig, Pipeline, synthetic_corpus,
+                        write_example_pages)
+from repro.train import OptimizerConfig, TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config("qwen2-1.5b"))
+    if args.hundred_m:
+        cfg = dataclasses.replace(
+            cfg, name="qwen2-100m", num_layers=8, d_model=512, num_heads=8,
+            num_kv_heads=2, head_dim=64, d_ff=2048, vocab_size=32768)
+    else:
+        cfg = dataclasses.replace(
+            cfg, name="qwen2-20m", num_layers=4, d_model=256, num_heads=4,
+            num_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=16384)
+    print(f"model: {cfg.name}  params={cfg.param_count() / 1e6:.1f}M")
+
+    tokens = synthetic_corpus(args.seq_len, 4096, cfg.vocab_size, seed=0)
+    buf = write_example_pages(args.seq_len, tokens, records_per_page=32)
+    dc = DataConfig(seq_len=args.seq_len, global_batch=args.global_batch,
+                    records_per_page=32)
+    src = BufferSource(buf)
+    pipe = Pipeline(dc, [src], len(src))
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro-ckpt-")
+    trainer = Trainer(
+        cfg,
+        OptimizerConfig(lr=6e-4, warmup_steps=args.steps // 20,
+                        total_steps=args.steps),
+        TrainConfig(steps=args.steps, ckpt_every=max(args.steps // 4, 1),
+                    ckpt_dir=ckpt_dir, log_every=max(args.steps // 15, 1)),
+        data=iter(pipe))
+    result = trainer.run()
+    pipe.stop()
+    for m in trainer.metrics:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"{m['tokens_per_s']:,.0f} tok/s")
+    print(f"done: {result['status']} at step {result['step']}; "
+          f"checkpoints in {ckpt_dir}")
+    first, last = result["losses"][0][1], result["losses"][-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'DECREASED' if last < first else 'no improvement'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Bebop-format distributed checkpointing."""
+from .format import (Manifest, TensorRecord, decode_manifest,  # noqa: F401
+                     encode_manifest, flatten_tree, read_tensors,
+                     unflatten_tree, write_tensor)
+from .manager import CheckpointManager  # noqa: F401

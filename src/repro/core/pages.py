@@ -1,0 +1,178 @@
+"""Record pages: the unit of bulk data movement in this framework.
+
+A page is a self-describing, checksummed, alignment-friendly container of N
+fixed-layout Bebop records — the on-disk / on-wire shape that training data,
+checkpoint shards, and batched inference payloads all use.  The layout is
+designed so a TPU can deserialize it (kernels/bebop_decode.py): the payload is
+a dense ``[record_count, record_stride]`` byte matrix whose stride is known at
+schema-compile time, which is exactly the contract a Pallas ``BlockSpec``
+needs.  This is the paper's "GPU-side deserialization for direct device
+memory placement" future-work item made concrete on TPU.
+
+Page layout (all little-endian):
+
+    offset  size  field
+    0       4     magic          0x42454250 ("BEBP")
+    4       2     version        1
+    6       2     flags          bit0: payload is zstd-compressed
+    8       4     record_count   u32
+    12      4     record_stride  u32 bytes per record
+    16      4     schema_hash    murmur3+lowbias32 of the schema name
+    20      4     payload_crc32  zlib.crc32 of the (uncompressed) payload
+    24      8     first_record   u64 global index of record 0 (restart cursor)
+    32      4     payload_bytes  u32 stored payload byte count
+    36      28    reserved (zero)
+    64      ...   payload, zero-padded so total page size % 512 == 0
+
+The 64-byte header and 512-byte page alignment mirror §4.4.1's alignment
+discussion, sized for DMA-friendly transfers rather than ``max_align_t``.
+The ``first_record`` field is the stream-cursor concept (§7.5) applied to
+data-pipeline restart: a reader resuming from cursor C skips whole pages
+until ``first_record + record_count > C``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct as _struct
+import zlib
+from typing import Iterator, Optional
+
+import numpy as np
+
+from . import fastwire
+from . import types as T
+from .hashing import schema_hash
+
+MAGIC = 0x42454250
+VERSION = 1
+HEADER_SIZE = 64
+PAGE_ALIGN = 512
+FLAG_COMPRESSED = 1
+
+_HEADER = _struct.Struct("<IHHIIIIQI")
+
+
+class PageError(T.BebopError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class PageHeader:
+    record_count: int
+    record_stride: int
+    schema_hash: int
+    payload_crc32: int
+    first_record: int
+    payload_bytes: int
+    flags: int = 0
+
+    @property
+    def compressed(self) -> bool:
+        return bool(self.flags & FLAG_COMPRESSED)
+
+
+def _pad_to(n: int, align: int) -> int:
+    return (n + align - 1) // align * align
+
+
+def write_page(schema_name: str, records: np.ndarray, first_record: int = 0,
+               *, compress: bool = False) -> bytes:
+    """Pack a structured array (or [N, stride] u8 matrix) into one page."""
+    if records.ndim == 1 and records.dtype.names:
+        payload = np.ascontiguousarray(records).view("u1").reshape(
+            len(records), records.dtype.itemsize)
+    elif records.ndim == 2 and records.dtype == np.uint8:
+        payload = np.ascontiguousarray(records)
+    else:
+        raise PageError(f"records must be structured or [N,stride] u8, "
+                        f"got {records.dtype} ndim={records.ndim}")
+    count, stride = payload.shape
+    raw = payload.tobytes()
+    crc = zlib.crc32(raw)
+    flags = 0
+    stored = raw
+    if compress:
+        import zstandard
+        stored = zstandard.ZstdCompressor(level=3).compress(raw)
+        flags |= FLAG_COMPRESSED
+    header = _HEADER.pack(MAGIC, VERSION, flags, count, stride,
+                          schema_hash(schema_name), crc, first_record,
+                          len(stored))
+    header += b"\x00" * (HEADER_SIZE - len(header))
+    total = _pad_to(HEADER_SIZE + len(stored), PAGE_ALIGN)
+    return header + stored + b"\x00" * (total - HEADER_SIZE - len(stored))
+
+
+def page_size(header: PageHeader) -> int:
+    return _pad_to(HEADER_SIZE + header.payload_bytes, PAGE_ALIGN)
+
+
+def read_header(buf, offset: int = 0) -> PageHeader:
+    if len(buf) - offset < HEADER_SIZE:
+        raise PageError("truncated page header")
+    (magic, version, flags, count, stride, shash, crc, first, stored
+     ) = _HEADER.unpack_from(buf, offset)
+    if magic != MAGIC:
+        raise PageError(f"bad page magic {magic:#x}")
+    if version != VERSION:
+        raise PageError(f"unsupported page version {version}")
+    return PageHeader(count, stride, shash, crc, first, stored, flags)
+
+
+def read_payload(buf, offset: int = 0, *, verify: bool = True,
+                 expect_schema: Optional[str] = None) -> np.ndarray:
+    """Return the page payload as a zero-copy ``[count, stride]`` u8 view.
+
+    (Compressed pages decompress first — one allocation, then a view.)
+    """
+    h = read_header(buf, offset)
+    if expect_schema is not None and h.schema_hash != schema_hash(expect_schema):
+        raise PageError(f"schema mismatch: page does not hold {expect_schema}")
+    start = offset + HEADER_SIZE
+    stored = memoryview(buf)[start:start + h.payload_bytes]
+    if len(stored) < h.payload_bytes:
+        raise PageError("truncated page payload")
+    if h.compressed:
+        import zstandard
+        raw: bytes = zstandard.ZstdDecompressor().decompress(
+            bytes(stored), max_output_size=h.record_count * h.record_stride)
+    else:
+        raw = stored  # type: ignore[assignment]
+    if verify:
+        if zlib.crc32(bytes(raw) if h.compressed else raw) != h.payload_crc32:
+            raise PageError("payload CRC mismatch (corrupt page)")
+    arr = np.frombuffer(raw, dtype="u1", count=h.record_count * h.record_stride)
+    return arr.reshape(h.record_count, h.record_stride)
+
+
+def decode_page(s: T.Struct, buf, offset: int = 0, *,
+                verify: bool = True) -> np.ndarray:
+    """Page -> structured record view (the branchless host decode)."""
+    payload = read_payload(buf, offset, verify=verify, expect_schema=s.name)
+    dt = fastwire.static_dtype(s)
+    if dt is None:
+        raise PageError(f"struct {s.name} has no static layout")
+    h = read_header(buf, offset)
+    if h.record_stride != dt.itemsize:
+        raise PageError(
+            f"stride mismatch: page {h.record_stride}, schema {dt.itemsize}")
+    return np.ascontiguousarray(payload).view(dt).reshape(h.record_count)
+
+
+def iter_pages(buf) -> Iterator[int]:
+    """Yield byte offsets of consecutive pages in a buffer/file mapping."""
+    off = 0
+    n = len(buf)
+    while off + HEADER_SIZE <= n:
+        h = read_header(buf, off)
+        yield off
+        off += page_size(h)
+
+
+def seek_cursor(buf, cursor: int) -> Optional[int]:
+    """First page offset containing global record index >= cursor (§7.5)."""
+    for off in iter_pages(buf):
+        h = read_header(buf, off)
+        if h.first_record + h.record_count > cursor:
+            return off
+    return None

@@ -1,0 +1,8 @@
+"""Bebop RPC (paper §7): transport-agnostic, Bebop-encoded at every layer."""
+from .status import Status, RpcError                       # noqa: F401
+from .framing import Frame, Flags, encode_frame, FrameReader  # noqa: F401
+from .deadline import Deadline                              # noqa: F401
+from .server import Router, RpcContext, Server              # noqa: F401
+from .client import Channel                                 # noqa: F401
+from .transport import (InMemoryTransport, TcpTransport,    # noqa: F401
+                        Http1Transport, connected_pair)

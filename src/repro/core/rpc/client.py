@@ -1,0 +1,306 @@
+"""Client channel: multiplexed calls over one transport connection.
+
+Supports all four method types, batch pipelining, futures, cursors and
+deadline propagation.  A background reader thread demultiplexes frames by
+stream_id into per-call queues.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import uuid as _uuid
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+
+from .. import types as T
+from .. import wire
+from ..schema import ServiceDef
+from . import wire_types as W
+from .deadline import Deadline
+from .framing import Flags, Frame, FrameReader, encode_frame
+from .status import RpcError, Status
+from .transport import Transport
+
+
+class StreamItem:
+    """One server-stream element with its optional cursor (§7.5)."""
+
+    __slots__ = ("payload", "cursor")
+
+    def __init__(self, payload: bytes, cursor: Optional[int]):
+        self.payload = payload
+        self.cursor = cursor
+
+
+class Channel:
+    def __init__(self, transport: Transport, *,
+                 metadata: Optional[Dict[str, str]] = None):
+        self.transport = transport
+        self.metadata = metadata or {}
+        self._ids = itertools.count(1, 2)  # client streams are odd
+        self._streams: Dict[int, queue.Queue] = {}
+        self._lock = threading.Lock()
+        self._send_lock = threading.Lock()
+        self._closed = False
+        self._reader = threading.Thread(target=self._read_loop, daemon=True,
+                                        name="bebop-rpc-client-reader")
+        self._reader.start()
+
+    # -- plumbing -------------------------------------------------------------
+    def _read_loop(self) -> None:
+        reader = FrameReader()
+        while not self._closed:
+            data = self.transport.recv()
+            if not data:
+                with self._lock:
+                    for q in self._streams.values():
+                        q.put(None)
+                return
+            for frame in reader.feed(data):
+                with self._lock:
+                    q = self._streams.get(frame.stream_id)
+                if q is not None:
+                    q.put(frame)
+
+    def _new_stream(self) -> Tuple[int, queue.Queue]:
+        sid = next(self._ids)
+        q: queue.Queue = queue.Queue()
+        with self._lock:
+            self._streams[sid] = q
+        return sid, q
+
+    def _finish(self, sid: int) -> None:
+        with self._lock:
+            self._streams.pop(sid, None)
+
+    def _send(self, frame: Frame) -> None:
+        with self._send_lock:
+            self.transport.send(encode_frame(frame))
+
+    def _header_bytes(self, method_id: int, *,
+                      deadline: Optional[Deadline],
+                      metadata: Optional[Dict[str, str]],
+                      cursor: int) -> bytes:
+        h: dict = {"method_id": method_id}
+        md = dict(self.metadata)
+        if metadata:
+            md.update(metadata)
+        if md:
+            h["metadata"] = md
+        if deadline is not None:
+            h["deadline"] = deadline.to_timestamp()
+        if cursor:
+            h["cursor"] = cursor
+        return wire.encode(W.CallHeader, h)
+
+    @staticmethod
+    def _encode_request(request: Any) -> bytes:
+        if request is None:
+            return b""
+        if isinstance(request, (bytes, bytearray, memoryview)):
+            return bytes(request)
+        if hasattr(request, "encode") and not isinstance(request, str):
+            return request.encode()
+        raise TypeError(f"cannot encode request of type {type(request)}")
+
+    @staticmethod
+    def _check_error(frame: Frame) -> None:
+        if frame.error:
+            err = wire.decode(W.ErrorPayload, frame.payload)
+            raise RpcError(err.get("code", Status.UNKNOWN),
+                           err.get("message", ""),
+                           bytes(bytearray(err.get("details", b""))))
+
+    # -- the four method types (§7.2) -------------------------------------------
+    def call(self, method_id: int, request: Any = b"", *,
+             client_stream: bool = False, server_stream: bool = False,
+             deadline: Optional[Deadline] = None,
+             metadata: Optional[Dict[str, str]] = None,
+             cursor: int = 0, timeout: Optional[float] = 30.0):
+        header = self._header_bytes(method_id, deadline=deadline,
+                                    metadata=metadata, cursor=cursor)
+        sid, q = self._new_stream()
+        if client_stream:
+            return self._client_stream_call(sid, q, header, request,
+                                            server_stream, timeout)
+        body = self._encode_request(request)
+        self._send(Frame(sid, header + body, Flags.END_STREAM))
+        if server_stream:
+            return self._stream_iter(sid, q, timeout)
+        return self._await_unary(sid, q, timeout)
+
+    def _await_unary(self, sid: int, q: queue.Queue,
+                     timeout: Optional[float]) -> bytes:
+        try:
+            frame = q.get(timeout=timeout)
+            if frame is None:
+                raise RpcError(Status.UNAVAILABLE, "connection closed")
+            self._check_error(frame)
+            return frame.payload
+        except queue.Empty:
+            raise RpcError(Status.DEADLINE_EXCEEDED,
+                           "client timeout waiting for response") from None
+        finally:
+            self._finish(sid)
+
+    def _stream_iter(self, sid: int, q: queue.Queue,
+                     timeout: Optional[float]) -> Iterator[StreamItem]:
+        def gen():
+            try:
+                while True:
+                    frame = q.get(timeout=timeout)
+                    if frame is None:
+                        raise RpcError(Status.UNAVAILABLE, "connection closed")
+                    self._check_error(frame)
+                    if frame.payload:
+                        yield StreamItem(frame.payload, frame.cursor)
+                    if frame.end_stream:
+                        return
+            finally:
+                self._finish(sid)
+        return gen()
+
+    def _client_stream_call(self, sid, q, header, requests,
+                            server_stream: bool, timeout):
+        first = True
+        if requests is not None:
+            for item in requests:
+                body = self._encode_request(item)
+                if first:
+                    self._send(Frame(sid, header + body))
+                    first = False
+                else:
+                    self._send(Frame(sid, body))
+        if first:
+            self._send(Frame(sid, header, Flags.END_STREAM))
+        else:
+            self._send(Frame(sid, b"", Flags.END_STREAM))
+        if server_stream:
+            return self._stream_iter(sid, q, timeout)
+        return self._await_unary(sid, q, timeout)
+
+    # -- batch pipelining (§7.3) --------------------------------------------------
+    def batch(self, calls: List[dict], *,
+              deadline: Optional[Deadline] = None,
+              timeout: Optional[float] = 30.0) -> List[dict]:
+        """One round trip for N (possibly dependent) calls.
+
+        calls: [{"method_id": id, "payload": bytes, "input_from": -1}, ...]
+        """
+        norm = []
+        for i, c in enumerate(calls):
+            norm.append({
+                "call_id": c.get("call_id", i),
+                "method_id": c["method_id"],
+                "payload": list(self._encode_request(c.get("payload", b""))),
+                "input_from": c.get("input_from", -1),
+            })
+        req: dict = {"calls": norm}
+        if deadline is not None:
+            req["deadline"] = deadline.to_timestamp()
+        out = self.call(W.METHOD_BATCH, wire.encode(W.BatchRequest, req),
+                        deadline=deadline, timeout=timeout)
+        res = wire.decode(W.BatchResponse, out)
+        results = res.get("results", [])
+        for r in results:
+            if "payload" in r:
+                r["payload"] = bytes(bytearray(r["payload"]))
+            if "stream" in r:
+                r["stream"] = [bytes(bytearray(x)) for x in r["stream"]]
+        return results
+
+    # -- futures (§7.6) -------------------------------------------------------------
+    def dispatch_future(self, method_id: int, request: Any = b"", *,
+                        batch: Optional[List[dict]] = None,
+                        deadline: Optional[Deadline] = None,
+                        idempotency_key: Optional[_uuid.UUID] = None,
+                        discard_result: bool = False,
+                        timeout: Optional[float] = 30.0) -> dict:
+        req: dict = {"discard_result": discard_result}
+        if batch is not None:
+            req["batch"] = {"calls": [{
+                "call_id": c.get("call_id", i),
+                "method_id": c["method_id"],
+                "payload": list(self._encode_request(c.get("payload", b""))),
+                "input_from": c.get("input_from", -1)} for i, c in
+                enumerate(batch)]}
+        else:
+            req["method_id"] = method_id
+            req["payload"] = list(self._encode_request(request))
+        if deadline is not None:
+            req["deadline"] = deadline.to_timestamp()
+        if idempotency_key is not None:
+            req["idempotency_key"] = idempotency_key
+        out = self.call(W.METHOD_FUTURE_DISPATCH,
+                        wire.encode(W.FutureDispatchRequest, req),
+                        timeout=timeout)
+        return wire.decode(W.FutureHandle, out)
+
+    def resolve_futures(self, ids: Optional[List[_uuid.UUID]] = None, *,
+                        timeout: Optional[float] = 30.0) -> Iterator[dict]:
+        req = {"ids": ids} if ids else {}
+        stream = self.call(W.METHOD_FUTURE_RESOLVE,
+                           wire.encode(W.FutureResolveRequest, req),
+                           server_stream=True, timeout=timeout)
+        for item in stream:
+            res = wire.decode(W.FutureResult, item.payload)
+            if "payload" in res:
+                res["payload"] = bytes(bytearray(res["payload"]))
+            yield res
+
+    def cancel_future(self, fid: _uuid.UUID, *,
+                      timeout: Optional[float] = 30.0) -> None:
+        self.call(W.METHOD_FUTURE_CANCEL,
+                  wire.encode(W.FutureCancelRequest, {"id": fid}),
+                  timeout=timeout)
+
+    # -- discovery ---------------------------------------------------------------------
+    def discover(self, *, timeout: Optional[float] = 30.0) -> dict:
+        out = self.call(W.METHOD_DISCOVER,
+                        wire.encode(W.DiscoverRequest, {}), timeout=timeout)
+        return wire.decode(W.DiscoverResponse, out)
+
+    # -- typed helpers --------------------------------------------------------------
+    def typed(self, svc: ServiceDef) -> "TypedClient":
+        return TypedClient(self, svc)
+
+    def close(self) -> None:
+        self._closed = True
+        self.transport.close()
+
+
+class TypedClient:
+    """Encode/decode wrapper around a Channel for one service definition."""
+
+    def __init__(self, channel: Channel, svc: ServiceDef):
+        self._channel = channel
+        self._svc = svc
+        for m in svc.methods:
+            setattr(self, m.name, self._make(m))
+
+    def _make(self, m):
+        ch = self._channel
+
+        def unary(request: Any, **kw):
+            out = ch.call(m.id, wire.encode(m.request, request), **kw)
+            return wire.decode(m.response, out)
+
+        def sstream(request: Any, **kw):
+            for item in ch.call(m.id, wire.encode(m.request, request),
+                                server_stream=True, **kw):
+                yield wire.decode(m.response, item.payload)
+
+        def cstream(requests: Iterable[Any], **kw):
+            out = ch.call(m.id,
+                          (wire.encode(m.request, r) for r in requests),
+                          client_stream=True, **kw)
+            return wire.decode(m.response, out)
+
+        def duplex(requests: Iterable[Any], **kw):
+            for item in ch.call(m.id,
+                                (wire.encode(m.request, r) for r in requests),
+                                client_stream=True, server_stream=True, **kw):
+                yield wire.decode(m.response, item.payload)
+
+        return {"unary": unary, "server_stream": sstream,
+                "client_stream": cstream, "duplex": duplex}[m.kind]

@@ -1,0 +1,398 @@
+"""Server side: integer-dispatch router + frame loop (§7.2).
+
+The router maps 32-bit method IDs to handlers — integer comparison, no
+string matching.  Reserved IDs implement the framework-level protocols:
+1=Batch, 2=FutureDispatch, 3=FutureResolve (server-stream), 4=FutureCancel,
+5=Discover.
+"""
+from __future__ import annotations
+
+import concurrent.futures as _cf
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+from .. import types as T
+from .. import wire
+from ..schema import ServiceDef
+from . import wire_types as W
+from .batch import execute_batch
+from .deadline import Deadline
+from .framing import Flags, Frame, FrameReader, encode_frame
+from .futures import FutureManager
+from .status import RpcError, Status
+from .transport import Transport
+
+
+class RpcContext:
+    """Per-call context: metadata, deadline, cursor, peer identity (§7.4-7.6)."""
+
+    def __init__(self, *, metadata: Optional[Dict[str, str]] = None,
+                 deadline: Optional[Deadline] = None, cursor: int = 0,
+                 peer: str = "local"):
+        self.metadata = metadata or {}
+        self.deadline = deadline
+        self.cursor = cursor
+        self.peer = peer
+        self._next_cursor: Optional[int] = None
+
+    # caller identity: authenticated identity if present, else peer (§7.6.1)
+    @property
+    def caller(self) -> str:
+        return self.metadata.get("authorization", self.peer)
+
+    def check_deadline(self) -> None:
+        if self.deadline is not None and self.deadline.expired():
+            raise RpcError(Status.DEADLINE_EXCEEDED, "deadline expired")
+
+    def set_cursor(self, value: int) -> None:
+        """Attach a position marker to the next emitted stream frame (§7.5)."""
+        self._next_cursor = value
+
+    def take_cursor(self) -> Optional[int]:
+        c = self._next_cursor
+        self._next_cursor = None
+        return c
+
+
+class _Method:
+    __slots__ = ("id", "name", "kind", "request_type", "response_type", "fn",
+                 "service")
+
+    def __init__(self, mid, name, kind, req_t, res_t, fn, service=""):
+        self.id = mid
+        self.name = name
+        self.kind = kind
+        self.request_type = req_t
+        self.response_type = res_t
+        self.fn = fn
+        self.service = service
+
+
+class Router:
+    """method_id -> handler.  Integer dispatch (§7.2)."""
+
+    def __init__(self):
+        self._methods: Dict[int, _Method] = {}
+
+    def register_handler(self, method_id: int, fn: Callable, *,
+                         name: str = "", kind: str = "unary",
+                         request_type: Optional[T.Type] = None,
+                         response_type: Optional[T.Type] = None,
+                         service: str = "") -> None:
+        if method_id in self._methods:
+            raise T.SchemaError(f"method id collision: {method_id:#x}")
+        if method_id in W.RESERVED_METHOD_IDS:
+            raise T.SchemaError(f"method id {method_id} is reserved")
+        self._methods[method_id] = _Method(method_id, name, kind,
+                                           request_type, response_type, fn,
+                                           service)
+
+    def add_service(self, svc: ServiceDef, impl: Any) -> None:
+        for m in svc.methods:
+            fn = getattr(impl, m.name, None)
+            if fn is None:
+                raise T.SchemaError(
+                    f"implementation missing method {svc.name}.{m.name}")
+            self.register_handler(m.id, fn, name=m.name, kind=m.kind,
+                                  request_type=m.request,
+                                  response_type=m.response, service=svc.name)
+
+    def lookup(self, method_id: int) -> _Method:
+        m = self._methods.get(method_id)  # integer compare, no strings
+        if m is None:
+            raise RpcError(Status.UNIMPLEMENTED,
+                           f"unknown method {method_id:#010x}")
+        return m
+
+    def method_kinds(self) -> Dict[int, str]:
+        return {mid: m.kind for mid, m in self._methods.items()}
+
+    def methods(self):
+        return list(self._methods.values())
+
+    # raw invoke used by the batch engine and futures: bytes -> bytes
+    def invoke_raw(self, method_id: int, payload: bytes, ctx: RpcContext):
+        m = self.lookup(method_id)
+        req = wire.decode(m.request_type, payload) \
+            if m.request_type is not None else payload
+        if m.kind == "server_stream":
+            def gen():
+                for item in m.fn(req, ctx):
+                    yield wire.encode(m.response_type, item) \
+                        if m.response_type is not None else bytes(item)
+            return gen()
+        out = m.fn(req, ctx)
+        if m.response_type is not None:
+            return wire.encode(m.response_type, out)
+        return bytes(out) if out is not None else b""
+
+
+class Server:
+    """Frame loop over any transport; one thread per connection."""
+
+    def __init__(self, router: Router, *,
+                 futures: Optional[FutureManager] = None,
+                 descriptor: bytes = b"",
+                 max_workers: int = 16):
+        self.router = router
+        self.futures = futures or FutureManager()
+        self.descriptor = descriptor
+        self.pool = _cf.ThreadPoolExecutor(max_workers=max_workers)
+        self._client_streams: Dict[int, "._StreamSink"] = {}
+
+    # -- frame-level entry (binary transports) -------------------------------
+    def serve_transport(self, transport: Transport, *,
+                        blocking: bool = True) -> Optional[threading.Thread]:
+        if not blocking:
+            t = threading.Thread(target=self.serve_transport,
+                                 args=(transport,), daemon=True,
+                                 name="bebop-rpc-conn")
+            t.start()
+            return t
+        reader = FrameReader()
+        sinks: Dict[int, _StreamSink] = {}
+        send_lock = threading.Lock()
+
+        def send(frame: Frame) -> None:
+            with send_lock:
+                transport.send(encode_frame(frame))
+
+        while True:
+            data = transport.recv()
+            if not data:
+                for s in sinks.values():
+                    s.push(None)
+                return None
+            for frame in reader.feed(data):
+                sink = sinks.get(frame.stream_id)
+                if sink is None:
+                    sink = self._open_stream(frame, send, transport.peer)
+                    if sink is not None:
+                        sinks[frame.stream_id] = sink
+                else:
+                    sink.push(frame.payload if frame.payload else None)
+                    if frame.end_stream:
+                        sink.push(None)
+                if frame.end_stream and frame.stream_id in sinks \
+                        and sinks[frame.stream_id].done:
+                    del sinks[frame.stream_id]
+
+    def _open_stream(self, frame: Frame, send, peer: str):
+        """First frame of a stream: CallHeader + request payload."""
+        try:
+            header, off = wire.decode_with_end(W.CallHeader, frame.payload)
+        except T.BebopError as e:
+            self._send_error(send, frame.stream_id,
+                             RpcError(Status.INVALID_ARGUMENT,
+                                      f"bad call header: {e}"))
+            return None
+        body = frame.payload[off:]
+        deadline = None
+        if "deadline" in header:
+            deadline = Deadline.from_timestamp(header["deadline"])
+        ctx = RpcContext(metadata=header.get("metadata", {}),
+                         deadline=deadline,
+                         cursor=header.get("cursor", 0), peer=peer)
+        mid = header.get("method_id", 0)
+        # reserved framework methods
+        if mid in W.RESERVED_METHOD_IDS:
+            self.pool.submit(self._run_reserved, mid, body, ctx, send,
+                             frame.stream_id)
+            return None
+        try:
+            m = self.router.lookup(mid)
+        except RpcError as e:
+            self._send_error(send, frame.stream_id, e)
+            return None
+        if m.kind in ("client_stream", "duplex"):
+            sink = _StreamSink()
+            if body:
+                sink.push(body)
+            if frame.end_stream:
+                sink.push(None)
+            self.pool.submit(self._run_streaming_in, m, sink, ctx, send,
+                             frame.stream_id)
+            return sink
+        self.pool.submit(self._run_single, m, body, ctx, send,
+                         frame.stream_id)
+        return None
+
+    # -- handler execution ---------------------------------------------------
+    def _run_single(self, m: _Method, body: bytes, ctx: RpcContext, send,
+                    stream_id: int) -> None:
+        try:
+            ctx.check_deadline()
+            req = wire.decode(m.request_type, body) \
+                if m.request_type is not None else body
+            if m.kind == "server_stream":
+                for item in m.fn(req, ctx):
+                    payload = wire.encode(m.response_type, item) \
+                        if m.response_type is not None else bytes(item)
+                    send(Frame(stream_id, payload, cursor=ctx.take_cursor()))
+                send(Frame(stream_id, b"", Flags.END_STREAM))
+                return
+            out = m.fn(req, ctx)
+            payload = wire.encode(m.response_type, out) \
+                if m.response_type is not None else (bytes(out or b""))
+            send(Frame(stream_id, payload, Flags.END_STREAM,
+                       cursor=ctx.take_cursor()))
+        except RpcError as e:
+            self._send_error(send, stream_id, e)
+        except Exception as e:  # noqa: BLE001
+            self._send_error(send, stream_id, RpcError(Status.INTERNAL,
+                                                       str(e)))
+
+    def _run_streaming_in(self, m: _Method, sink: "_StreamSink",
+                          ctx: RpcContext, send, stream_id: int) -> None:
+        def req_iter():
+            while True:
+                item = sink.pop()
+                if item is None:
+                    return
+                yield (wire.decode(m.request_type, item)
+                       if m.request_type is not None else item)
+        try:
+            ctx.check_deadline()
+            if m.kind == "duplex":
+                for item in m.fn(req_iter(), ctx):
+                    payload = wire.encode(m.response_type, item) \
+                        if m.response_type is not None else bytes(item)
+                    send(Frame(stream_id, payload, cursor=ctx.take_cursor()))
+                send(Frame(stream_id, b"", Flags.END_STREAM))
+            else:  # client_stream -> single response
+                out = m.fn(req_iter(), ctx)
+                payload = wire.encode(m.response_type, out) \
+                    if m.response_type is not None else bytes(out or b"")
+                send(Frame(stream_id, payload, Flags.END_STREAM))
+        except RpcError as e:
+            self._send_error(send, stream_id, e)
+        except Exception as e:  # noqa: BLE001
+            self._send_error(send, stream_id,
+                             RpcError(Status.INTERNAL, str(e)))
+        finally:
+            sink.done = True
+
+    # -- reserved framework methods -------------------------------------------
+    def _run_reserved(self, mid: int, body: bytes, ctx: RpcContext, send,
+                      stream_id: int) -> None:
+        try:
+            if mid == W.METHOD_BATCH:
+                req = wire.decode(W.BatchRequest, body)
+                deadline = ctx.deadline
+                if "deadline" in req:
+                    deadline = Deadline.from_timestamp(req["deadline"])
+                results = execute_batch(
+                    req.get("calls", []),
+                    lambda m_id, payload, c: self.router.invoke_raw(
+                        m_id, payload, c),
+                    deadline=deadline, ctx=ctx, executor=self.pool,
+                    method_kinds=self.router.method_kinds())
+                out = wire.encode(W.BatchResponse, {"results": results})
+                send(Frame(stream_id, out, Flags.END_STREAM))
+            elif mid == W.METHOD_FUTURE_DISPATCH:
+                req = wire.decode(W.FutureDispatchRequest, body)
+                handle = self._dispatch_future(req, ctx)
+                send(Frame(stream_id, wire.encode(W.FutureHandle, handle),
+                           Flags.END_STREAM))
+            elif mid == W.METHOD_FUTURE_RESOLVE:
+                req = wire.decode(W.FutureResolveRequest, body)
+                for res in self.futures.resolve(ctx.caller,
+                                                req.get("ids") or None):
+                    send(Frame(stream_id,
+                               wire.encode(W.FutureResult, res)))
+                send(Frame(stream_id, b"", Flags.END_STREAM))
+            elif mid == W.METHOD_FUTURE_CANCEL:
+                req = wire.decode(W.FutureCancelRequest, body)
+                self.futures.cancel(ctx.caller, req["id"])
+                send(Frame(stream_id, wire.encode(W.Empty, {}),
+                           Flags.END_STREAM))
+            elif mid == W.METHOD_DISCOVER:
+                methods = [{"service": m.service, "name": m.name,
+                            "routing_id": m.id, "kind": m.kind}
+                           for m in self.router.methods()]
+                out = wire.encode(W.DiscoverResponse, {
+                    "methods": methods,
+                    "descriptor": list(self.descriptor)})
+                send(Frame(stream_id, out, Flags.END_STREAM))
+        except RpcError as e:
+            self._send_error(send, stream_id, e)
+        except Exception as e:  # noqa: BLE001
+            self._send_error(send, stream_id,
+                             RpcError(Status.INTERNAL, str(e)))
+
+    def _dispatch_future(self, req: dict, ctx: RpcContext) -> dict:
+        deadline = None
+        if "deadline" in req:
+            deadline = Deadline.from_timestamp(req["deadline"])
+        inner_ctx = RpcContext(metadata=ctx.metadata, deadline=deadline,
+                               peer=ctx.peer)
+        if "batch" in req:
+            batch = req["batch"]
+
+            def run() -> bytes:
+                results = execute_batch(
+                    batch.get("calls", []),
+                    lambda m_id, payload, c: self.router.invoke_raw(
+                        m_id, payload, c),
+                    deadline=deadline, ctx=inner_ctx, executor=self.pool,
+                    method_kinds=self.router.method_kinds())
+                return wire.encode(W.BatchResponse, {"results": results})
+        else:
+            mid = req.get("method_id", 0)
+            payload = bytes(req.get("payload", b""))
+
+            def run() -> bytes:
+                # the inner handler can't tell it runs as a future (§7.6)
+                return self.router.invoke_raw(mid, payload, inner_ctx)
+
+        fid, existing = self.futures.dispatch(
+            ctx.caller, run,
+            idempotency_key=req.get("idempotency_key"),
+            deadline=deadline,
+            discard_result=req.get("discard_result", False))
+        return {"id": fid, "existing": existing}
+
+    @staticmethod
+    def _send_error(send, stream_id: int, e: RpcError) -> None:
+        payload = wire.encode(W.ErrorPayload, {
+            "code": e.code, "message": e.message,
+            "details": list(e.details)})
+        send(Frame(stream_id, payload, Flags.ERROR | Flags.END_STREAM))
+
+    # -- TCP convenience -------------------------------------------------------
+    def listen_tcp(self, host: str = "127.0.0.1", port: int = 0):
+        """Bind + serve in background threads.  Returns (host, port, sock)."""
+        import socket as _socket
+        from .transport import TcpTransport
+        lsock = _socket.socket(_socket.AF_INET, _socket.SOCK_STREAM)
+        lsock.setsockopt(_socket.SOL_SOCKET, _socket.SO_REUSEADDR, 1)
+        lsock.bind((host, port))
+        lsock.listen(64)
+
+        def accept_loop():
+            while True:
+                try:
+                    conn, _ = lsock.accept()
+                except OSError:
+                    return
+                self.serve_transport(TcpTransport(conn), blocking=False)
+
+        t = threading.Thread(target=accept_loop, daemon=True,
+                             name="bebop-rpc-accept")
+        t.start()
+        return lsock.getsockname()[0], lsock.getsockname()[1], lsock
+
+
+class _StreamSink:
+    """Queue of inbound payloads for client-stream/duplex methods."""
+
+    def __init__(self):
+        import queue as _q
+        self._q = _q.Queue()
+        self.done = False
+
+    def push(self, item) -> None:
+        self._q.put(item)
+
+    def pop(self):
+        return self._q.get()

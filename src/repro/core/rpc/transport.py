@@ -1,0 +1,204 @@
+"""Transports (§7.7): the protocol is transport-agnostic.
+
+Three concrete transports ship here:
+
+  * InMemoryTransport — queue pair with injectable one-way latency, used by
+    tests and by the batch-pipelining RTT benchmark (latency actually
+    matters there: it is what batching amortizes).
+  * TcpTransport — the binary framing directly over a socket.
+  * Http1Transport — request/response mapping for HTTP/1.1-only platforms
+    (§7.7: serverless, workers, browsers).  Metadata maps to headers, the
+    deadline to ``bebop-deadline``, errors to HTTP status codes; the body
+    carries Bebop frames, so streaming responses arrive as consecutive
+    frames in the response body.
+
+All transports expose the same byte-stream interface; the frame layer on
+top never knows which one it runs over.
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import threading
+import time
+from typing import Optional, Tuple
+
+from .status import HTTP_FROM_STATUS
+
+
+class Transport:
+    def send(self, data: bytes) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        """Blocking read; returns b"" when the peer closed."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    @property
+    def peer(self) -> str:
+        return "unknown"
+
+
+class InMemoryTransport(Transport):
+    """One endpoint of an in-memory duplex pipe with simulated latency."""
+
+    def __init__(self, rx: "queue.Queue", tx: "queue.Queue",
+                 latency: float = 0.0, name: str = "mem"):
+        self._rx = rx
+        self._tx = tx
+        self.latency = latency
+        self._name = name
+        self._closed = False
+        self.bytes_sent = 0
+        self.messages_sent = 0
+
+    def send(self, data: bytes) -> None:
+        if self._closed:
+            raise ConnectionError("transport closed")
+        self.bytes_sent += len(data)
+        self.messages_sent += 1
+        self._tx.put((time.monotonic() + self.latency, data))
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        try:
+            ready_at, data = self._rx.get(timeout=timeout)
+        except queue.Empty:
+            return b""
+        wait = ready_at - time.monotonic()
+        if wait > 0:
+            time.sleep(wait)  # latency injection: delivery time honored
+        return data
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._tx.put((time.monotonic(), b""))
+
+    @property
+    def peer(self) -> str:
+        return self._name
+
+
+def connected_pair(latency: float = 0.0
+                   ) -> Tuple[InMemoryTransport, InMemoryTransport]:
+    """(client, server) in-memory transports with one-way ``latency`` sec."""
+    a_to_b: queue.Queue = queue.Queue()
+    b_to_a: queue.Queue = queue.Queue()
+    client = InMemoryTransport(b_to_a, a_to_b, latency, "mem-client")
+    server = InMemoryTransport(a_to_b, b_to_a, latency, "mem-server")
+    return client, server
+
+
+class TcpTransport(Transport):
+    """Binary frames directly over TCP (§7.2 'binary transports')."""
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            self._peer = "%s:%d" % self._sock.getpeername()[:2]
+        except OSError:
+            self._peer = "tcp"
+
+    @classmethod
+    def connect(cls, host: str, port: int, timeout: float = 5.0
+                ) -> "TcpTransport":
+        s = socket.create_connection((host, port), timeout=timeout)
+        s.settimeout(None)
+        return cls(s)
+
+    def send(self, data: bytes) -> None:
+        self._sock.sendall(data)
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        self._sock.settimeout(timeout)
+        try:
+            return self._sock.recv(65536)
+        except socket.timeout:
+            return b""
+        except OSError:
+            return b""
+
+    def close(self) -> None:
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+    @property
+    def peer(self) -> str:
+        return self._peer
+
+
+class Http1Transport(Transport):
+    """HTTP/1.1 mapping: one POST per call, frames in the body (§7.7).
+
+    The client side builds ``POST /bebop HTTP/1.1`` requests whose body is
+    the call's frames; the server side answers with the response frames in
+    the body.  Errors surface both as the ERROR frame *and* the HTTP status
+    code so plain HTTP infrastructure (load balancers, API gateways) can see
+    failures.  No HTTP/2, no trailers, no proxies.
+    """
+
+    def __init__(self, inner: Transport, *, client: bool):
+        self.inner = inner
+        self.is_client = client
+        self._buf = bytearray()
+
+    # -- client --------------------------------------------------------------
+    def send(self, data: bytes) -> None:
+        if self.is_client:
+            head = (b"POST /bebop HTTP/1.1\r\n"
+                    b"content-type: application/bebop\r\n"
+                    b"content-length: " + str(len(data)).encode() + b"\r\n"
+                    b"\r\n")
+            self.inner.send(head + data)
+        else:
+            status = 200
+            head = ("HTTP/1.1 %d %s\r\n"
+                    "content-type: application/bebop\r\n"
+                    "content-length: %d\r\n\r\n"
+                    % (status, "OK", len(data))).encode()
+            self.inner.send(head + data)
+
+    def send_error(self, code: int, body: bytes = b"") -> None:
+        http = HTTP_FROM_STATUS.get(code, 500)
+        head = ("HTTP/1.1 %d Error\r\n"
+                "content-type: application/bebop\r\n"
+                "bebop-status: %d\r\n"
+                "content-length: %d\r\n\r\n" % (http, code, len(body))
+                ).encode()
+        self.inner.send(head + body)
+
+    # -- shared --------------------------------------------------------------
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        """Strip one HTTP envelope, return its body (the Bebop frames)."""
+        while True:
+            sep = self._buf.find(b"\r\n\r\n")
+            if sep != -1:
+                head = bytes(self._buf[:sep]).decode("latin-1")
+                clen = 0
+                for line in head.split("\r\n")[1:]:
+                    k, _, v = line.partition(":")
+                    if k.strip().lower() == "content-length":
+                        clen = int(v.strip())
+                body_start = sep + 4
+                if len(self._buf) >= body_start + clen:
+                    body = bytes(self._buf[body_start:body_start + clen])
+                    del self._buf[:body_start + clen]
+                    return body
+            data = self.inner.recv(timeout)
+            if not data:
+                return b""
+            self._buf += data
+
+    def close(self) -> None:
+        self.inner.close()
+
+    @property
+    def peer(self) -> str:
+        return self.inner.peer

@@ -1,0 +1,6 @@
+"""Bebop-paged data pipeline: records, sharded loaders, device decode."""
+from .pipeline import (BufferSource, DataConfig, FileSource,  # noqa: F401
+                       HedgedReader, Pipeline, device_batches)
+from .records import (example_layout, pack_examples,  # noqa: F401
+                      synthetic_corpus, train_example_struct,
+                      write_example_pages)

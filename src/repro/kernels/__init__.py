@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical layers.
+
+  bebop_decode    — on-device Bebop page deserialization (the paper's
+                    technique; §4.4 adapted to TPU VMEM tiling)
+  flash_attention — blockwise online-softmax attention (GQA/causal/window)
+  rwkv6_scan      — RWKV6 WKV recurrence with data-dependent decay
+  rglru_scan      — RG-LRU gated diagonal recurrence (RecurrentGemma)
+
+`ops` is the public API; `ref` holds the pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401

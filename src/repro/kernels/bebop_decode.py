@@ -1,0 +1,138 @@
+"""On-device Bebop page decode — the paper's core insight, TPU-native.
+
+The paper's CPU decoder is "a single load instruction" because every wire
+type is fixed-width.  On TPU the same property means something stronger: a
+page of N fixed-layout records is a dense ``[N, stride]`` u8 matrix whose
+column layout is known at schema-compile time, so *deserialization is a
+layout transformation* — slice columns, bitcast, widen — with zero
+data-dependent control flow.  Varint data cannot be decoded this way at all
+(the byte width of element k depends on the *values* of elements 0..k-1,
+a serial dependency); fixed-width data decodes as pure vector loads.
+
+This kernel implements column extraction:
+
+    pages  : [N, stride] uint8 in HBM  (written by core/pages.py)
+    output : [N, count]  of the field's dtype
+
+tiled ``block_n`` records at a time through VMEM.  The bitcast chain for
+bfloat16 (u8 -> u16 -> u32<<16 -> f32) mirrors §3.2's wire definition.
+
+The paper's "GPU-side deserialization for direct device memory placement"
+future-work item is exactly this: the host DMAs raw page bytes to HBM and
+the accelerator materializes tensors in the layout the model consumes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_block(x, offset: int, count: int, wire_dtype: str, out_dtype):
+    """u8 [bn, stride] -> [bn, count] decoded values.  No branches."""
+    bn = x.shape[0]
+    if wire_dtype in ("uint32", "int32", "float32"):
+        sl = jax.lax.slice(x, (0, offset), (bn, offset + 4 * count))
+        u32 = jax.lax.bitcast_convert_type(sl.reshape(bn, count, 4),
+                                           jnp.uint32)
+        if wire_dtype == "float32":
+            return jax.lax.bitcast_convert_type(u32, jnp.float32) \
+                .astype(out_dtype)
+        return u32.astype(out_dtype)
+    if wire_dtype in ("uint16", "bfloat16", "float16"):
+        sl = jax.lax.slice(x, (0, offset), (bn, offset + 2 * count))
+        u16 = jax.lax.bitcast_convert_type(sl.reshape(bn, count, 2),
+                                           jnp.uint16)
+        if wire_dtype == "bfloat16":
+            f32 = jax.lax.bitcast_convert_type(
+                u16.astype(jnp.uint32) << 16, jnp.float32)
+            return f32.astype(out_dtype)
+        if wire_dtype == "float16":
+            f16 = jax.lax.bitcast_convert_type(u16, jnp.float16)
+            return f16.astype(out_dtype)
+        return u16.astype(out_dtype)
+    if wire_dtype in ("uint8", "byte", "bool"):
+        sl = jax.lax.slice(x, (0, offset), (bn, offset + count))
+        return sl.astype(out_dtype)
+    raise ValueError(f"unsupported wire dtype {wire_dtype}")
+
+
+def _column_kernel(x_ref, o_ref, *, offset, count, wire_dtype, out_dtype):
+    o_ref[...] = _decode_block(x_ref[...], offset, count, wire_dtype,
+                               out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "offset", "count", "wire_dtype", "out_dtype", "block_n", "interpret"))
+def decode_column(pages: jax.Array, *, offset: int, count: int,
+                  wire_dtype: str, out_dtype=None,
+                  block_n: int = 256, interpret: bool = True) -> jax.Array:
+    """Extract one fixed-width column from a page of records.
+
+    pages: [N, stride] u8.  N must be a multiple of block_n (pages are
+    written with power-of-two record counts; callers pad short tails).
+    """
+    n, stride = pages.shape
+    out_dtype = out_dtype or _default_out(wire_dtype)
+    block_n = min(block_n, n)
+    if n % block_n:
+        raise ValueError(f"record count {n} not divisible by block {block_n}")
+    kernel = functools.partial(_column_kernel, offset=offset, count=count,
+                               wire_dtype=wire_dtype, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, count), out_dtype),
+        in_specs=[pl.BlockSpec((block_n, stride), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_n, count), lambda i: (i, 0)),
+        grid=(n // block_n,),
+        interpret=interpret,
+    )(pages)
+
+
+def _default_out(wire_dtype: str):
+    return {
+        "uint32": jnp.uint32, "int32": jnp.int32, "float32": jnp.float32,
+        "uint16": jnp.uint16, "bfloat16": jnp.float32,
+        "float16": jnp.float32, "uint8": jnp.uint8, "byte": jnp.uint8,
+        "bool": jnp.uint8,
+    }[wire_dtype]
+
+
+def _multi_kernel(x_ref, *o_refs, fields):
+    x = x_ref[...]
+    for o_ref, (offset, count, wire_dtype, out_dtype) in zip(o_refs, fields):
+        o_ref[...] = _decode_block(x, offset, count, wire_dtype, out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fields", "block_n", "interpret"))
+def decode_columns(pages: jax.Array, *, fields: tuple,
+                   block_n: int = 256, interpret: bool = True):
+    """Decode several columns in ONE pass over the page bytes.
+
+    ``fields``: tuple of (offset, count, wire_dtype, out_dtype_name).
+    Reading the page block once and emitting every column amortizes the
+    HBM->VMEM transfer across fields — the kernel-fusion analogue of the
+    paper's single-pass decoder.
+    """
+    n, stride = pages.shape
+    block_n = min(block_n, n)
+    if n % block_n:
+        raise ValueError(f"record count {n} not divisible by block {block_n}")
+    specs = tuple((off, cnt, wd, jnp.dtype(od).type)
+                  for (off, cnt, wd, od) in fields)
+    kernel = functools.partial(_multi_kernel, fields=specs)
+    out_shapes = [jax.ShapeDtypeStruct((n, cnt), od)
+                  for (_, cnt, _, od) in specs]
+    out_specs = [pl.BlockSpec((block_n, cnt), lambda i: (i, 0))
+                 for (_, cnt, _, _) in specs]
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        in_specs=[pl.BlockSpec((block_n, stride), lambda i: (i, 0))],
+        out_specs=out_specs,
+        grid=(n // block_n,),
+        interpret=interpret,
+    )(pages)

@@ -1,0 +1,97 @@
+"""Public jit'd kernel API.
+
+Every op picks the Pallas kernel on TPU and the pure-jnp oracle elsewhere
+(overridable with ``impl=``).  Tests call both paths explicitly and assert
+allclose; models call these entry points only.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bebop_decode as _bd
+from . import flash_attention as _fa
+from . import ref
+from . import rglru_scan as _rg
+from . import rwkv6_scan as _rw
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+def _pick(impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    return "pallas" if _on_tpu() else "reference"
+
+
+# -- Bebop device decode ------------------------------------------------------
+
+
+def decode_column(pages: jax.Array, *, offset: int, count: int,
+                  wire_dtype: str, out_dtype=None, block_n: int = 256,
+                  impl: Optional[str] = None) -> jax.Array:
+    """[N, stride] u8 page -> [N, count] decoded column."""
+    if _pick(impl) == "pallas":
+        return _bd.decode_column(pages, offset=offset, count=count,
+                                 wire_dtype=wire_dtype, out_dtype=out_dtype,
+                                 block_n=block_n, interpret=not _on_tpu())
+    fn = ref.DECODERS[wire_dtype]
+    out = fn(pages, offset, count)
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return out
+
+
+def decode_columns(pages: jax.Array, fields, *, block_n: int = 256,
+                   impl: Optional[str] = None):
+    """Decode several columns in one pass; fields = ((off, cnt, wd, od), ...)."""
+    if _pick(impl) == "pallas":
+        return _bd.decode_columns(pages, fields=tuple(fields),
+                                  block_n=block_n, interpret=not _on_tpu())
+    out = []
+    for (off, cnt, wd, od) in fields:
+        out.append(decode_column(pages, offset=off, count=cnt, wire_dtype=wd,
+                                 out_dtype=od, impl="reference"))
+    return out
+
+
+# -- attention ---------------------------------------------------------------
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              scale: Optional[float] = None, q_offset: int = 0,
+              block_q: int = 128, block_k: int = 128,
+              impl: Optional[str] = None) -> jax.Array:
+    if _pick(impl) == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale, block_q=block_q,
+                                   block_k=block_k, q_offset=q_offset,
+                                   interpret=not _on_tpu())
+    return ref.attention(q, k, v, causal=causal, window=window, scale=scale,
+                         q_offset=q_offset)
+
+
+# -- recurrences ---------------------------------------------------------------
+
+
+def rwkv6(r, k, v, w, u, *, chunk: int = 128,
+          impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    if _pick(impl) == "pallas":
+        return _rw.rwkv6_scan(r, k, v, w, u, chunk=chunk,
+                              interpret=not _on_tpu())
+    return ref.rwkv6(r, k, v, w, u)
+
+
+def rglru(x, a, *, chunk: int = 256,
+          impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    if _pick(impl) == "pallas":
+        return _rg.rglru_scan(x, a, chunk=chunk, interpret=not _on_tpu())
+    return ref.rglru(x, a)

@@ -1,0 +1,224 @@
+"""Dry-run cell construction: abstract inputs, shardings and step functions
+for every (arch x shape) combination.  Shared by dryrun.py / roofline.py /
+the launchers — kept import-safe (no jax device access at module import).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import (ModelConfig, ShapeConfig, SHAPES, get_config,
+                            supports_long_context)
+from ..models import get_model
+from ..train import optimizer as O
+from ..train.train_loop import make_train_step
+from . import shardings as S
+from .mesh import dp_axes, dp_size
+
+
+@dataclasses.dataclass
+class CellOverrides:
+    """Hillclimb levers (§Perf)."""
+    remat: Optional[str] = None
+    loss_chunk: Optional[int] = None
+    compression: Optional[str] = None       # grad compression
+    expert_parallel: bool = False
+    zero: bool = True
+    moment_dtype: str = "float32"
+    param_dtype: Optional[str] = None
+    rwkv_impl: Optional[str] = None         # sequential | chunked
+    rwkv_chunk: Optional[int] = None
+    sharding: str = "tp"                    # tp | fsdp
+    moe_dispatch: Optional[str] = None      # grouped | global
+    grad_accum: int = 1
+
+
+def arch_shape_cells():
+    """All (arch, shape) dry-run cells, with skip annotations."""
+    from ..configs import ARCH_IDS, load_all
+    load_all()
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            skip = None
+            if shape.name == "long_500k" and not supports_long_context(cfg):
+                skip = ("pure full-attention arch: long_500k needs "
+                        "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+            cells.append((arch, shape.name, skip))
+    return cells
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input — no allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.input_kind == "embeddings":
+        out = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16),
+               "positions": jax.ShapeDtypeStruct((3, b, s), i32)}
+    elif cfg.input_kind == "frames":
+        out = {"frames": jax.ShapeDtypeStruct(
+            (b, max(s // cfg.frame_ratio, 1), cfg.d_model), bf16),
+            "tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return out
+
+
+def effective_config(arch: str, shape_name: str,
+                     ov: Optional[CellOverrides] = None) -> ModelConfig:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kw: Dict[str, Any] = {}
+    ov = ov or CellOverrides()
+    # baseline policy: full remat for training (fits activations at 4k x 256),
+    # chunked vocab loss for big-vocab archs
+    if shape.kind == "train":
+        kw["remat"] = ov.remat if ov.remat is not None else "full"
+        if ov.loss_chunk is not None:
+            kw["loss_chunk"] = ov.loss_chunk
+    else:
+        if ov.remat is not None:
+            kw["remat"] = ov.remat
+    if ov.param_dtype:
+        kw["dtype"] = ov.param_dtype
+    if ov.rwkv_impl:
+        kw["rwkv_impl"] = ov.rwkv_impl
+    if ov.rwkv_chunk:
+        kw["rwkv_chunk"] = ov.rwkv_chunk
+    if ov.moe_dispatch:
+        kw["moe_dispatch"] = ov.moe_dispatch
+    if ov.sharding == "fsdp":
+        kw["fsdp_per_layer_gather"] = True
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+class Cell:
+    """One (arch x shape x mesh) dry-run unit: build -> lower -> compile."""
+
+    def __init__(self, arch: str, shape_name: str, mesh,
+                 overrides: Optional[CellOverrides] = None):
+        self.arch = arch
+        self.shape = SHAPES[shape_name]
+        self.mesh = mesh
+        self.ov = overrides or CellOverrides()
+        self.cfg = effective_config(arch, shape_name, self.ov)
+        self.model = get_model(self.cfg)
+
+    # -- abstract trees ------------------------------------------------------
+    def abstract_params(self):
+        return jax.eval_shape(self.model.init, jax.random.PRNGKey(0))
+
+    def opt_config(self) -> O.OptimizerConfig:
+        return O.OptimizerConfig(
+            compression=self.ov.compression or "none",
+            moment_dtype=self.ov.moment_dtype,
+            grad_accum=self.ov.grad_accum)
+
+    def trip_count(self) -> int:
+        """Scan trip count for while-aware collective accounting."""
+        cfg = self.cfg
+        if cfg.block_pattern:
+            return (cfg.num_layers - len(cfg.tail_pattern)) \
+                // len(cfg.block_pattern)
+        return cfg.num_layers
+
+    # -- lowering ------------------------------------------------------------------
+    def lower(self):
+        kind = self.shape.kind
+        if kind == "train":
+            return self._lower_train()
+        if kind == "prefill":
+            return self._lower_prefill()
+        return self._lower_decode()
+
+    def _shardings(self, spec_tree):
+        return S.named(self.mesh, spec_tree)
+
+    def _lower_train(self):
+        cfg, mesh = self.cfg, self.mesh
+        params_abs = self.abstract_params()
+        pspecs = S.param_specs(cfg, params_abs, mesh,
+                               expert_parallel=self.ov.expert_parallel,
+                               mode=self.ov.sharding)
+        opt_cfg = self.opt_config()
+        opt_abs = jax.eval_shape(
+            lambda p: O.init_opt_state(p, opt_cfg), params_abs)
+        mom_specs = S.zero_specs(pspecs, params_abs, mesh) if self.ov.zero \
+            else pspecs
+        ospecs = {"m": mom_specs, "v": mom_specs, "step": P()}
+        if opt_cfg.compression == "int8":
+            ospecs["ef"] = mom_specs
+        bspecs = S.batch_specs(cfg, self.shape, mesh,
+                               mode=self.ov.sharding)
+        batch_abs = input_specs(cfg, self.shape)
+
+        step = make_train_step(self.model, opt_cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(self._shardings(pspecs), self._shardings(ospecs),
+                          self._shardings(bspecs)),
+            out_shardings=(self._shardings(pspecs), self._shardings(ospecs),
+                           None),
+            donate_argnums=(0, 1))
+        return jitted.lower(params_abs, opt_abs, batch_abs)
+
+    def _lower_prefill(self):
+        cfg, mesh = self.cfg, self.mesh
+        params_abs = self.abstract_params()
+        pspecs = S.param_specs(cfg, params_abs, mesh,
+                               expert_parallel=self.ov.expert_parallel,
+                               mode=self.ov.sharding)
+        bspecs = S.batch_specs(cfg, self.shape, mesh,
+                               mode=self.ov.sharding)
+        batch_abs = input_specs(cfg, self.shape)
+        cache_len = self.shape.seq_len
+
+        def prefill(params, batch):
+            return self.model.prefill(params, batch, cache_len)
+
+        cache_abs = jax.eval_shape(prefill, params_abs, batch_abs)[1]
+        cspecs = S.cache_specs(cfg, cache_abs, mesh)
+        jitted = jax.jit(
+            prefill,
+            in_shardings=(self._shardings(pspecs), self._shardings(bspecs)),
+            out_shardings=(None, self._shardings(cspecs)))
+        return jitted.lower(params_abs, batch_abs)
+
+    def _lower_decode(self):
+        cfg, mesh = self.cfg, self.mesh
+        params_abs = self.abstract_params()
+        pspecs = S.param_specs(cfg, params_abs, mesh,
+                               expert_parallel=self.ov.expert_parallel,
+                               mode=self.ov.sharding)
+        b = self.shape.global_batch
+        cache_abs = jax.eval_shape(
+            lambda: self.model.init_cache(b, self.shape.seq_len))
+        cspecs = S.cache_specs(cfg, cache_abs, mesh)
+        tokens_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        dp = dp_axes(mesh)
+        dpn = dp if len(dp) > 1 else (dp[0] if dp else None)
+        tok_spec = P(dpn, None) if b % dp_size(mesh) == 0 else P(None, None)
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def decode(params, tokens, cache, pos):
+            return self.model.decode_step(params, tokens, cache, pos)
+
+        jitted = jax.jit(
+            decode,
+            in_shardings=(self._shardings(pspecs),
+                          S.named(mesh, tok_spec),
+                          self._shardings(cspecs), None),
+            out_shardings=(None, self._shardings(cspecs)),
+            donate_argnums=(2,))
+        return jitted.lower(params_abs, tokens_abs, cache_abs, pos_abs)

@@ -1,0 +1,65 @@
+"""Serving launcher: Bebop-RPC inference server over TCP.
+
+    python -m repro.launch.serve --arch gemma-2b --port 9944
+
+Speaks the full §7 protocol: unary Generate, cursor-resumable Stream,
+batch pipelining (Tokenize -> Generate -> Score in one round trip),
+futures with push-based resolve, deadline propagation, discovery.
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--once", action="store_true",
+                    help="start, print the port, serve one probe, exit "
+                         "(smoke-test mode)")
+    args = ap.parse_args(argv)
+
+    from ..configs import get_config, reduced_config
+    from ..serving import Engine, ServeConfig, build_server
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced_config(cfg)
+    engine = Engine(cfg, ServeConfig(cache_len=args.cache_len,
+                                     max_new_tokens=args.max_new_tokens))
+    server = build_server(engine)
+    host, port, lsock = server.listen_tcp(args.host, args.port)
+    print(f"bebop-rpc serving {cfg.name} on {host}:{port}", flush=True)
+
+    if args.once:
+        import numpy as np
+        from ..core import wire
+        from ..core.rpc import Channel, TcpTransport
+        from ..serving.service import GenerateRequest, GenerateResponse, \
+            InferenceService
+        ch = Channel(TcpTransport.connect(host, port))
+        inf = ch.typed(InferenceService)
+        prompt = np.arange(8, dtype=np.uint32) % cfg.vocab_size
+        res = inf.Generate({"tokens": prompt, "batch": 1, "seq_len": 8,
+                            "max_new_tokens": 4})
+        print("probe generated", res["new_tokens"], "tokens:",
+              list(res["tokens"])[:8])
+        ch.close()
+        lsock.close()
+        return 0
+
+    try:
+        import time
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        lsock.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,253 @@
+"""Partitioning rules: DP / TP / EP / SP specs for every architecture family.
+
+Megatron-style tensor parallelism over the "model" axis:
+  * column-parallel (shard output features): wq/wk/wv, w_gate/w_up, ...
+  * row-parallel  (shard input features):   wo, w_down, ...
+  * vocab-parallel embedding / LM head
+  * MoE experts: TP *within* experts by default (always divisible);
+    expert-parallel (shard E over "model") available when E % model == 0
+    — selectable via ``expert_parallel=True`` (the §Perf hillclimb uses it)
+  * ZeRO-1: optimizer moments additionally sharded over the data axis
+
+Batch (and pod) axes carry pure data parallelism.  KV caches shard over
+batch when divisible, else over the sequence axis (memory scaling for
+serving shapes).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .mesh import axis_size, dp_axes, dp_size
+
+# weight-name classes (matched on the trailing pytree key)
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "wck", "wcr", "wg",
+                 "wr", "w_i", "w_r", "w_rec"}
+_ROW_PARALLEL = {"wo", "w_down", "wcv", "w_out"}
+_COL_BIAS = {"bq", "bk", "bv", "b_i", "b_r", "conv_b"}
+_REPLICATED = {"ln1", "ln2", "ln_x", "final_norm", "enc_norm", "ln1_s",
+               "ln1_b", "ln2_s", "ln2_b", "gn_s", "gn_b", "mu", "mu_x",
+               "mu_ck", "mu_cr", "w0", "u", "router", "lora_A", "lora_B",
+               "wdecay_A", "wdecay_B", "step"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return tuple(out)
+
+
+def _leaf_spec(cfg: ModelConfig, names: Tuple[str, ...], shape,
+               model_axis: str, *, expert_parallel: bool,
+               model_size: int) -> P:
+    name = names[-1] if names else ""
+    ndim = len(shape)
+    none = (None,) * ndim
+
+    def shard_dim(d: int) -> P:
+        if shape[d] % model_size != 0:
+            # GSPMD pads uneven shards, but we only *request* clean ones
+            return P(*none)
+        entries = list(none)
+        entries[d] = model_axis
+        return P(*entries)
+
+    if name in _REPLICATED or ndim == 0:
+        return P(*none)
+    if name == "embed":
+        return shard_dim(ndim - 2) if ndim >= 2 else P(*none)
+    if name == "lm_head":
+        return shard_dim(ndim - 1)
+    in_moe = "moe" in names and "shared" not in names
+    if in_moe and name in ("w_gate", "w_up", "w_down"):
+        m = cfg.moe
+        e_dim = ndim - 3  # [.., E, D, F] / [.., E, F, D]
+        if expert_parallel and m is not None \
+                and m.num_experts % model_size == 0:
+            return shard_dim(e_dim)
+        if name in ("w_gate", "w_up"):
+            return shard_dim(ndim - 1)
+        return shard_dim(ndim - 2)
+    if name in _COL_PARALLEL:
+        return shard_dim(ndim - 1)
+    if name in _ROW_PARALLEL:
+        return shard_dim(ndim - 2)
+    if name in _COL_BIAS or name == "lam":
+        return shard_dim(ndim - 1)
+    if name == "conv":
+        return shard_dim(ndim - 1)
+    return P(*none)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh, *,
+                expert_parallel: bool = False,
+                mode: str = "tp") -> Any:
+    """PartitionSpec tree matching a params (shape) tree.
+
+    mode="tp": Megatron tensor parallelism over the "model" axis (baseline).
+    mode="fsdp": shard the leading (layer-stack / vocab) dimension over
+    "model" instead — the scan's per-layer dynamic-slice becomes a
+    per-layer parameter all-gather (FSDP semantics via sharding specs).
+    Collective bytes scale with PARAMETER size instead of ACTIVATION size,
+    which wins whenever activations-per-step exceed parameters
+    (the §Perf beyond-paper optimization for TP-activation-bound cells).
+    """
+    model_size = axis_size(mesh, "model")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        if mode == "fsdp":
+            specs.append(_fsdp_spec(names, leaf.shape, model_size))
+        else:
+            specs.append(_leaf_spec(cfg, names, leaf.shape, "model",
+                                    expert_parallel=expert_parallel,
+                                    model_size=model_size))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _fsdp_spec(names: Tuple[str, ...], shape, model_size: int) -> P:
+    ndim = len(shape)
+    if ndim == 0 or names and names[-1] == "step":
+        return P()
+    total = 1
+    for s in shape:
+        total *= s
+    if total < 2 ** 12:       # tiny leaves: replication is cheaper
+        return P(*([None] * ndim))
+    # shard the largest divisible dim, preferring dim 0 (the layer stack)
+    for d in list(range(ndim)):
+        if shape[d] % model_size == 0:
+            entries = [None] * ndim
+            entries[d] = "model"
+            return P(*entries)
+    return P(*([None] * ndim))
+
+
+def zero_specs(param_spec_tree: Any, params_shape: Any, mesh, *,
+               min_size: int = 2 ** 16) -> Any:
+    """ZeRO-1 moment specs: add the data axis on the largest free dim."""
+    data = dp_axes(mesh)
+    dsize = dp_size(mesh)
+    if dsize <= 1 or not data:
+        return param_spec_tree
+
+    def one(spec, leaf):
+        shape = leaf.shape
+        if int(np.prod(shape)) < min_size:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_size = None, 0
+        for i, (e, d) in enumerate(zip(entries, shape)):
+            if e is None and d % dsize == 0 and d > best_size:
+                best, best_size = i, d
+        if best is not None:
+            entries[best] = data if len(data) > 1 else data[0]
+        return P(*entries)
+
+    return jax.tree.map(one, param_spec_tree, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(cfg: ModelConfig, pspecs: Any, params_shape: Any, mesh,
+                    *, zero: bool = True) -> Any:
+    mom = zero_specs(pspecs, params_shape, mesh) if zero else pspecs
+    return {"m": mom, "v": mom, "step": P()}
+
+
+# -- activations / batches ----------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                mode: str = "tp") -> Any:
+    """Input specs for a given (arch, shape) cell.
+
+    mode="fsdp": the batch shards over data AND model axes (pure DP over
+    all chips); parameters are gathered per layer instead.
+    """
+    dp = dp_axes(mesh)
+    if mode == "fsdp":
+        full = dp + ("model",)
+        total = dp_size(mesh) * axis_size(mesh, "model")
+        if shape.global_batch % total == 0:
+            dp, dp_total = full, total
+        else:
+            dp_total = dp_size(mesh)
+    else:
+        dp_total = dp_size(mesh)
+    dpn = dp if len(dp) > 1 else (dp[0] if dp else None)
+    b = shape.global_batch
+    bspec = dpn if (dpn is not None and b % dp_total == 0) else None
+    if shape.kind == "decode":
+        tok = P(bspec, None)
+    else:
+        tok = P(bspec, None)
+    out = {}
+    if cfg.input_kind == "embeddings":
+        out["embeds"] = P(bspec, None, None)
+        out["positions"] = P(None, bspec, None)
+    elif cfg.input_kind == "frames":
+        out["frames"] = P(bspec, None, None)
+        out["tokens"] = tok
+    else:
+        out["tokens"] = tok
+    if shape.kind == "train":
+        out["labels"] = tok
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh) -> Any:
+    """KV-cache / state sharding: batch over data when divisible; the
+    sequence axis of attention caches over "model" otherwise (SP)."""
+    dp = dp_axes(mesh)
+    dpn = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dsize = dp_size(mesh)
+    msize = axis_size(mesh, "model")
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        name = names[-1] if names else ""
+        # layer-stacked leaves have a leading L/n_super dim
+        batch_dim = 1 if len(shape) >= 2 else 0
+        if name in ("k", "v") and len(shape) >= 4:
+            # [L, B, H, S, hd] or [B, H, S, hd]
+            bd = len(shape) - 4
+            if shape[bd] % dsize == 0 and dpn is not None:
+                entries[bd] = dpn
+            hd_ = len(shape) - 3
+            sd = len(shape) - 2
+            if shape[hd_] % msize == 0:
+                entries[hd_] = "model"
+            elif shape[sd] % msize == 0:
+                entries[sd] = "model"
+            return P(*entries)
+        if name == "memory":
+            if shape[0] % dsize == 0 and dpn is not None:
+                entries[0] = dpn
+            return P(*entries)
+        # recurrent states: [L, B, ...] shard batch; channels over model
+        if len(shape) >= 2 and shape[batch_dim] % dsize == 0 \
+                and dpn is not None:
+            entries[batch_dim] = dpn
+        if len(shape) >= 3 and shape[-1] % msize == 0:
+            entries[-1] = "model"
+        return P(*entries)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

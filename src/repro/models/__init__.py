@@ -1,0 +1,2 @@
+"""Model zoo: 10 assigned architectures over shared JAX building blocks."""
+from .transformer import DecoderLM, EncDecLM, HybridLM, get_model  # noqa: F401

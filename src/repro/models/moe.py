@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, capacity dispatch.
+
+TPU-friendly dispatch: tokens are scattered into a per-expert [E, C, D]
+buffer (C = capacity) with positions computed by a cumulative-sum over the
+routing assignment, expert FFNs run as batched einsums over stacked expert
+weights, and outputs gather back with the routing weights.  FLOPs scale
+with top_k (plus shared experts), not with E.  Tokens beyond capacity are
+dropped (standard GShard/Switch semantics, capacity_factor controls slack).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import Params, dtype_of, init_dense
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    d, fe = cfg.d_model, m.d_expert
+    scale = d ** -0.5
+    p = {
+        "router": init_dense(ks[0], d, m.num_experts, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (m.num_experts, d, fe),
+                                     jnp.float32) * scale).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (m.num_experts, d, fe),
+                                   jnp.float32) * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (m.num_experts, fe, d),
+                                     jnp.float32) * fe ** -0.5).astype(dt),
+    }
+    if m.num_shared:
+        sk = jax.random.split(ks[4], 3)
+        fs = m.d_expert * m.num_shared
+        p["shared"] = {
+            "w_gate": init_dense(sk[0], d, fs, dt),
+            "w_up": init_dense(sk[1], d, fs, dt),
+            "w_down": init_dense(sk[2], fs, d, dt),
+        }
+    return p
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, T, D] -> (out [B, T, D], aux_loss scalar f32)."""
+    if cfg.moe_dispatch == "grouped":
+        return moe_ffn_grouped(p, x, cfg)
+    return moe_ffn_global(p, x, cfg)
+
+
+def moe_ffn_grouped(p: Params, x: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """GShard-style grouped dispatch: each batch row is its own dispatch
+    group, so the position-in-expert cumsum runs over T (local to a data
+    shard) instead of over ALL tokens.  The global-cumsum variant
+    (moe_ffn_global) forces an [N*k, E] all-gather across data shards —
+    the dominant collective in the baseline dry-run (§Perf, granite cell).
+    """
+    m = cfg.moe
+    b, t, d = x.shape
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, m.top_k)          # [B, T, k]
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], m.num_experts,
+                                      dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * mean_prob) * m.num_experts * m.router_aux_coef
+
+    capacity = int(max(1, round(t * m.top_k * m.capacity_factor
+                                / m.num_experts)))
+    flat_idx = idx.reshape(b, t * m.top_k)                 # [B, T*k]
+    onehot = jax.nn.one_hot(flat_idx, m.num_experts, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=1) - onehot) * onehot, axis=-1)
+    keep = pos < capacity                                  # [B, T*k]
+    flat_w = weights.reshape(b, t * m.top_k) \
+        * keep.astype(weights.dtype)
+
+    tok_idx = jnp.repeat(jnp.arange(t), m.top_k)           # [T*k]
+    safe_pos = jnp.where(keep, pos, 0)
+    contrib = jnp.where(keep[..., None], x[:, tok_idx], 0)  # [B, T*k, D]
+    buf = jnp.zeros((b, m.num_experts, capacity, d), x.dtype)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], flat_idx.shape)
+    buf = buf.at[bidx, flat_idx, safe_pos].add(contrib, mode="drop")
+
+    gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    act = jax.nn.silu(gate) * up
+    out_buf = jnp.einsum("becf,efd->becd", act, p["w_down"])
+
+    expert_out = out_buf[bidx, flat_idx, safe_pos]          # [B, T*k, D]
+    expert_out = expert_out * flat_w[..., None].astype(expert_out.dtype)
+    out = jnp.zeros((b, t, d), expert_out.dtype) \
+        .at[:, tok_idx].add(expert_out)
+
+    if m.num_shared:
+        sp = p["shared"]
+        g = x @ sp["w_gate"]
+        out = out + (jax.nn.silu(g) * (x @ sp["w_up"])) @ sp["w_down"]
+    return out, aux
+
+
+def moe_ffn_global(p: Params, x: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Global-cumsum dispatch (baseline; kept for §Perf comparison)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    n_tok = b * t
+    xt = x.reshape(n_tok, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])           # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, m.top_k)              # [N, k]
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], m.num_experts,
+                                      dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * mean_prob) * m.num_experts * m.router_aux_coef
+
+    capacity = int(max(1, round(n_tok * m.top_k * m.capacity_factor
+                                / m.num_experts)))
+
+    # position of each (token, slot) within its expert
+    flat_idx = idx.reshape(-1)                                 # [N*k]
+    onehot = jax.nn.one_hot(flat_idx, m.num_experts, dtype=jnp.int32)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)      # [N*k, E]
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)             # [N*k]
+    keep = pos < capacity
+    flat_w = weights.reshape(-1) * keep.astype(weights.dtype)
+
+    # scatter tokens into the expert buffer [E, C, D]
+    tok_idx = jnp.repeat(jnp.arange(n_tok), m.top_k)
+    buf = jnp.zeros((m.num_experts, capacity, d), x.dtype)
+    safe_pos = jnp.where(keep, pos, 0)
+    contrib = jnp.where(keep[:, None], xt[tok_idx], 0)
+    buf = buf.at[flat_idx, safe_pos].add(contrib, mode="drop")
+
+    # expert FFN as stacked einsums (swiglu)
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    act = jax.nn.silu(gate) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", act, p["w_down"])     # [E, C, D]
+
+    # gather back with routing weights
+    expert_out = out_buf[flat_idx, safe_pos]                   # [N*k, D]
+    expert_out = expert_out * flat_w[:, None].astype(expert_out.dtype)
+    out = jnp.zeros((n_tok, d), expert_out.dtype).at[tok_idx].add(expert_out)
+
+    if m.num_shared:
+        sp = p["shared"]
+        g = xt @ sp["w_gate"]
+        out = out + (jax.nn.silu(g) * (xt @ sp["w_up"])) @ sp["w_down"]
+
+    return out.reshape(b, t, d), aux

@@ -1,0 +1,104 @@
+"""Griffin recurrent block (RecurrentGemma): conv1d + RG-LRU, gated.
+
+    branch_gate = gelu(x @ w_gate)                       [B, T, lru]
+    branch_rec  = rglru(conv1d_causal(x @ w_rec))        [B, T, lru]
+    out         = (branch_gate * branch_rec) @ w_out     [B, T, D]
+
+RG-LRU (arXiv:2402.19427):
+    i_t = sigmoid(x_t @ W_i + b_i)          input gate
+    r_t = sigmoid(x_t @ W_r + b_r)          recurrence gate
+    log_a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    a_t = exp(log_a_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Decode state per layer: conv tail [B, conv_width-1, lru] + h [B, lru].
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import Params, dtype_of, init_dense
+
+_C = 8.0
+
+
+def init_recurrent_block(key, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": init_dense(ks[0], d, lru, dt),
+        "w_rec": init_dense(ks[1], d, lru, dt),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, lru), jnp.float32)
+                 * (cfg.conv_width * lru) ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((lru,), dt),
+        "w_i": init_dense(ks[3], lru, lru, dt),
+        "b_i": jnp.zeros((lru,), dt),
+        "w_r": init_dense(ks[4], lru, lru, dt),
+        "b_r": jnp.zeros((lru,), dt),
+        # Lambda parametrized so a^c in [0.9, 0.999] at init
+        "lam": (jax.random.uniform(ks[5], (lru,), jnp.float32,
+                                   minval=2.0, maxval=6.0)),
+        "w_out": init_dense(jax.random.fold_in(key, 7), lru, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array, bias: jax.Array,
+                 tail: Optional[jax.Array] = None):
+    """Per-channel causal conv over time.  x: [B, T, C]; kernel: [W, C]."""
+    w = kernel.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)           # [B, T+W-1, C]
+    out = jnp.zeros_like(x)
+    for i in range(w):  # W static (4): unrolled taps, depthwise
+        out = out + xp[:, i:i + x.shape[1]] * kernel[i]
+    new_tail = xp[:, -(w - 1):] if w > 1 else tail
+    return out + bias, new_tail
+
+
+def rglru_gates(p: Params, x: jax.Array):
+    """x: [B, T, lru] (post-conv).  Returns (a, gated_input)."""
+    i = jax.nn.sigmoid(x @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    r = jax.nn.sigmoid(x @ p["w_r"] + p["b_r"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r       # [B, T, lru]
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gated = scale * i * x.astype(jnp.float32)
+    return a, gated
+
+
+def recurrent_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                    state: Optional[Dict[str, jax.Array]] = None):
+    """Returns (out [B, T, D], new_state {conv, h})."""
+    st = state or {}
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    rec_in = x @ p["w_rec"]
+    rec_in, new_conv = _causal_conv(rec_in, p["conv"], p["conv_b"],
+                                    st.get("conv"))
+    a, gated = rglru_gates(p, rec_in)
+    if x.shape[1] == 1 and "h" in st:
+        h = a[:, 0] * st["h"] + gated[:, 0]
+        rec_out = h[:, None]
+        new_h = h
+    else:
+        rec_out, new_h = ops.rglru(gated, a)
+    rec_out = rec_out.astype(x.dtype)
+    out = (gate * rec_out) @ p["w_out"]
+    return out, {"conv": new_conv, "h": new_h}
+
+
+def init_recurrent_state(cfg: ModelConfig, batch: int, dtype
+                         ) -> Dict[str, jax.Array]:
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, lru), dtype),
+        "h": jnp.zeros((batch, lru), jnp.float32),
+    }

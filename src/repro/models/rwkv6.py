@@ -1,0 +1,165 @@
+"""RWKV6 (Finch) blocks: token-shift time-mix with data-dependent decay +
+squared-ReLU channel-mix.  Attention-free; decode state is O(1) per layer
+(one [H, K, V] WKV matrix + two shift vectors), which is what makes the
+long_500k cell tractable for this architecture.
+
+Faithful structure per arXiv:2404.05892:
+  * ddlerp token-shift: x_i = x + (x_prev - x) * (mu_i + lora_i(x_mix))
+  * data-dependent decay: w = exp(-exp(w0 + tanh(x_w @ A_w) @ B_w))
+  * bonus u per head; per-head GroupNorm on the WKV output; silu gate
+  * channel-mix: k = relu(x_k W_k)^2, out = sigmoid(x_r W_r) * (k W_v)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import (Params, dtype_of, group_norm, init_dense, layer_norm)
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv_block(key, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    ext, dext = cfg.time_mix_extra_dim, cfg.decay_extra_dim
+    h = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 16)
+    p: Params = {
+        "ln1_s": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+        "ln2_s": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+        # token-shift base mixes
+        "mu_x": jnp.zeros((d,), dt),
+        "mu": jnp.zeros((5, d), dt),
+        # ddlerp low-rank adapters: one A, per-target B
+        "lora_A": init_dense(ks[0], d, 5 * ext, dt, scale=1e-2),
+        "lora_B": (jax.random.normal(ks[1], (5, ext, d), jnp.float32)
+                   * 1e-2).astype(dt),
+        # time-mix projections
+        "wr": init_dense(ks[2], d, d, dt),
+        "wk": init_dense(ks[3], d, d, dt),
+        "wv": init_dense(ks[4], d, d, dt),
+        "wg": init_dense(ks[5], d, d, dt),
+        "wo": init_dense(ks[6], d, d, dt),
+        # data-dependent decay
+        "w0": jnp.full((d,), -6.0, dt),
+        "wdecay_A": init_dense(ks[7], d, dext, dt, scale=1e-2),
+        "wdecay_B": init_dense(ks[8], dext, d, dt, scale=1e-2),
+        # per-head bonus
+        "u": (jax.random.normal(ks[9], (h, cfg.rwkv_head_dim), jnp.float32)
+              * 0.1).astype(dt),
+        "gn_s": jnp.ones((d,), dt), "gn_b": jnp.zeros((d,), dt),
+        # channel-mix
+        "mu_ck": jnp.zeros((d,), dt), "mu_cr": jnp.zeros((d,), dt),
+        "wck": init_dense(ks[10], d, cfg.d_ff, dt),
+        "wcv": init_dense(ks[11], cfg.d_ff, d, dt),
+        "wcr": init_dense(ks[12], d, d, dt),
+    }
+    return p
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_prev: previous token's activation ([B, T, D] sequence shift)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x: jax.Array, xx: jax.Array):
+    """Data-dependent token-shift mixes for (r, k, v, w, g)."""
+    delta = xx - x
+    x_mix = x + delta * p["mu_x"]
+    ext = p["lora_A"].shape[1] // 5
+    lora = jnp.tanh(x_mix @ p["lora_A"])                    # [B,T,5*ext]
+    b, t, _ = x.shape
+    lora = lora.reshape(b, t, 5, ext)
+    adj = jnp.einsum("btie,ied->btid", lora, p["lora_B"])   # [B,T,5,D]
+    mixed = x[:, :, None] + delta[:, :, None] * (p["mu"] + adj)
+    return tuple(mixed[:, :, i] for i in range(5))
+
+
+def time_mix(p: Params, x: jax.Array, cfg: ModelConfig, *,
+             shift_state: Optional[jax.Array] = None,
+             wkv_state: Optional[jax.Array] = None):
+    """RWKV6 attention replacement.  Returns (out, new_shift, new_wkv)."""
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xx = _shift(x, shift_state)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = (xr @ p["wr"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay, per channel (§ "Finch")
+    w_log = p["w0"].astype(jnp.float32) \
+        + (jnp.tanh(xw @ p["wdecay_A"]) @ p["wdecay_B"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                            # (0, 1)
+    w = w.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    u = p["u"].astype(jnp.float32)
+    if t == 1 and wkv_state is not None:
+        # closed-form single decode step (no scan)
+        S = wkv_state                                        # [B,H,K,V]
+        r1 = r[:, :, 0].astype(jnp.float32)
+        k1 = k[:, :, 0].astype(jnp.float32)
+        v1 = v[:, :, 0].astype(jnp.float32)
+        w1 = w[:, :, 0].astype(jnp.float32)
+        kv = k1[..., :, None] * v1[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", r1, S + u[None, :, :, None] * kv)
+        new_state = w1[..., :, None] * S + kv
+        o = o[:, :, None]                                    # [B,H,1,V]
+    elif cfg.rwkv_impl == "chunked":
+        from ..kernels import ref as _ref
+        o, new_state = _ref.rwkv6_chunked(r, k, v, w, u,
+                                          chunk=cfg.rwkv_chunk)
+    else:
+        o, new_state = ops.rwkv6(r, k, v, w, u)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d).astype(x.dtype)
+    o = group_norm(o, p["gn_s"], p["gn_b"], h, cfg.norm_eps)
+    out = (o * g.astype(o.dtype)) @ p["wo"]
+    return out, x[:, -1], new_state
+
+
+def channel_mix(p: Params, x: jax.Array, *,
+                shift_state: Optional[jax.Array] = None):
+    xx = _shift(x, shift_state)
+    xk = x + (xx - x) * p["mu_ck"]
+    xr = x + (xx - x) * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ p["wck"]))
+    kv = k @ p["wcv"]
+    out = jax.nn.sigmoid(xr @ p["wcr"]) * kv
+    return out, x[:, -1]
+
+
+def rwkv_block(p: Params, x: jax.Array, cfg: ModelConfig,
+               state: Optional[Dict[str, jax.Array]] = None):
+    """One RWKV6 layer.  state: {"shift_t", "shift_c", "wkv"} for decode."""
+    st = state or {}
+    h1 = layer_norm(x, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+    att, new_shift_t, new_wkv = time_mix(
+        p, h1, cfg, shift_state=st.get("shift_t"), wkv_state=st.get("wkv"))
+    x = x + att
+    h2 = layer_norm(x, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+    ffn, new_shift_c = channel_mix(p, h2, shift_state=st.get("shift_c"))
+    x = x + ffn
+    new_state = {"shift_t": new_shift_t[:, None] if new_shift_t.ndim == 2
+                 else new_shift_t,
+                 "shift_c": new_shift_c[:, None] if new_shift_c.ndim == 2
+                 else new_shift_c,
+                 "wkv": new_wkv}
+    return x, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    return {
+        "shift_t": jnp.zeros((batch, 1, d), dtype),
+        "shift_c": jnp.zeros((batch, 1, d), dtype),
+        "wkv": jnp.zeros((batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                         jnp.float32),
+    }

@@ -1,0 +1,4 @@
+"""Serving: engine (prefill/decode) + Bebop-RPC inference service."""
+from .engine import Engine, ServeConfig  # noqa: F401
+from .service import (InferenceService, InferenceImpl,  # noqa: F401
+                      build_server)

@@ -1,0 +1,113 @@
+"""Serving engine: jitted prefill/decode steps + simple continuous batching.
+
+`prefill_step` and `decode_step` here are exactly what the multi-pod
+dry-run lowers for the inference shapes (prefill_32k / decode_32k /
+long_500k): one new token against a KV cache (or recurrent state) of
+``seq_len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import get_model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    cache_len: int = 1024
+    max_new_tokens: int = 64
+    temperature: float = 0.0    # 0 = greedy
+
+
+class Engine:
+    """Single-model serving engine with greedy/temperature sampling."""
+
+    def __init__(self, cfg: ModelConfig, serve_cfg: ServeConfig,
+                 params: Optional[Any] = None, *, seed: int = 0):
+        self.cfg = cfg
+        self.serve = serve_cfg
+        self.model = get_model(cfg)
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        self.params = params
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, serve_cfg.cache_len))
+        self._decode = jax.jit(self.model.decode_step,
+                               donate_argnums=(2,))
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
+
+    # -- generation --------------------------------------------------------------
+    def generate(self, tokens: np.ndarray, *, max_new_tokens: Optional[int]
+                 = None, stop_token: Optional[int] = None,
+                 deadline=None, start_from: int = 0,
+                 on_token=None) -> np.ndarray:
+        """Greedy generation.  tokens: [B, T] prompt.
+
+        ``start_from``: number of already-delivered tokens to skip (the RPC
+        stream-cursor resume path: the handler re-generates deterministically
+        and skips past what the client already has).
+        """
+        cfg, sc = self.cfg, self.serve
+        maxn = max_new_tokens or sc.max_new_tokens
+        b, t = tokens.shape
+        batch = self._prefill_batch(tokens)
+        logits, cache = self._prefill(self.params, batch)
+        self.stats["prefills"] += 1
+        out: List[np.ndarray] = []
+        pos = t
+        next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)[:, None]
+        for i in range(maxn):
+            if deadline is not None and deadline.expired():
+                break
+            if i >= start_from:
+                out.append(next_tok)
+                if on_token is not None:
+                    on_token(i, next_tok)
+            logits, cache = self._decode(self.params, next_tok, cache,
+                                         jnp.int32(pos))
+            self.stats["decode_steps"] += 1
+            pos += 1
+            next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)[:, None]
+            if stop_token is not None and bool((next_tok == stop_token).all()):
+                break
+        self.stats["tokens_out"] += sum(o.shape[1] for o in out) * b
+        result = np.concatenate(out, axis=1) if out else \
+            np.zeros((b, 0), np.int32)
+        return result
+
+    def _prefill_batch(self, tokens: np.ndarray) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.input_kind == "frames":
+            b, t = tokens.shape
+            frames = np.zeros((b, max(t // cfg.frame_ratio, 1), cfg.d_model),
+                              np.float32)
+            return {"frames": frames, "tokens": tokens}
+        if cfg.input_kind == "embeddings":
+            raise NotImplementedError(
+                "vlm serving requires precomputed embeddings; use "
+                "generate_from_embeds")
+        return {"tokens": tokens}
+
+    # -- scoring (used by the batch-pipelining example: embed -> generate ->
+    #    score chains in one RPC round trip) -----------------------------------
+    def score(self, tokens: np.ndarray) -> np.ndarray:
+        """Mean log-prob of each sequence under the model.  [B, T] -> [B]."""
+        batch = {"tokens": tokens[:, :-1]}
+        if self.cfg.input_kind == "frames":
+            b, t = tokens.shape
+            batch["frames"] = np.zeros(
+                (b, max(t // self.cfg.frame_ratio, 1), self.cfg.d_model),
+                np.float32)
+        logits = jax.jit(self.model.logits)(self.params, batch)
+        lf = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(
+            lf, jnp.asarray(tokens[:, 1:])[..., None], axis=-1)[..., 0]
+        return np.asarray(jnp.mean(picked, axis=-1))

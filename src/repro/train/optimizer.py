@@ -1,0 +1,182 @@
+"""AdamW + schedules + ZeRO-style state sharding + gradient compression.
+
+Implemented from scratch (no optax):
+
+  * AdamW with decoupled weight decay, global-norm clipping, bf16 or f32
+    moments
+  * warmup-cosine LR schedule
+  * `zero_specs`: optimizer-moment PartitionSpecs that additionally shard
+    the largest divisible axis over the data axis (ZeRO-1); params keep
+    their TP sharding
+  * gradient compression for the cross-data-parallel all-reduce: cast to
+    bf16 ("bf16" mode) or int8 with per-tensor scale + error feedback
+    ("int8" mode, state carried in the optimizer state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    compression: str = "none"     # none | bf16 | int8
+    grad_accum: int = 1           # microbatches per step (activation memory)
+
+
+def lr_schedule(cfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        decay_steps = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+        frac = jnp.clip((step - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        mult = jnp.where(step < cfg.warmup_steps, warm,
+                         cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+        return cfg.lr * mult
+    return fn
+
+
+def init_opt_state(params: Params, cfg: OptimizerConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)  # noqa: E731
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compression == "int8":
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                                   params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+# -- gradient compression -------------------------------------------------------
+
+
+def compress_grads(grads, state, cfg: OptimizerConfig):
+    """Apply the configured compression *before* the data-parallel reduce.
+
+    bf16: halves all-reduce bytes (visible in the dry-run HLO).
+    int8: quarters them; per-tensor absmax scale with error feedback so the
+    quantization error is re-injected next step instead of being lost.
+    """
+    if cfg.compression == "none":
+        return grads, state
+    if cfg.compression == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), state
+    if cfg.compression == "int8":
+        ef = state["ef"]
+
+        def q(g, e):
+            gf = g.astype(jnp.float32) + e.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            deq = qi.astype(jnp.float32) * scale
+            return deq, (gf - deq).astype(jnp.bfloat16)
+
+        pairs = jax.tree.map(q, grads, ef)
+        new_grads = jax.tree.map(lambda p: p[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda p: p[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        state = dict(state)
+        state["ef"] = new_ef
+        return new_grads, state
+    raise ValueError(cfg.compression)
+
+
+# -- AdamW update -----------------------------------------------------------------
+
+
+def adamw_update(grads, state, params, cfg: OptimizerConfig
+                 ) -> Tuple[Params, Dict[str, Any]]:
+    step = state["step"] + 1
+    lr = lr_schedule(cfg)(step)
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        m_hat = m_new / (1 - cfg.b1 ** step.astype(jnp.float32))
+        v_hat = v_new / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m_new.astype(mdt), v_new.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    leaves_def = jax.tree.structure(params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = dict(state)
+    new_state.update({"m": new_m, "v": new_v, "step": step})
+    del leaves_def
+    return new_params, new_state
+
+
+# -- ZeRO-1 sharding specs --------------------------------------------------------
+
+
+def zero_specs(param_specs, param_shapes, data_axis: str = "data",
+               data_size: int = 1, min_size: int = 2 ** 16):
+    """Moment PartitionSpecs: params' TP specs + data-axis sharding on the
+    largest still-unsharded, divisible dimension (ZeRO-1).
+
+    Small tensors (< min_size elements) stay replicated — sharding them
+    costs more in collective latency than it saves in bytes.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def one(spec, shape):
+        total = 1
+        for s in shape.shape if hasattr(shape, "shape") else shape:
+            total *= s
+        dims = shape.shape if hasattr(shape, "shape") else shape
+        if total < min_size:
+            return spec
+        entries = list(spec) if spec is not None else [None] * len(dims)
+        while len(entries) < len(dims):
+            entries.append(None)
+        # choose the largest unsharded divisible dim
+        best, best_size = None, 0
+        for i, (e, d) in enumerate(zip(entries, dims)):
+            if e is None and d % data_size == 0 and d > best_size:
+                best, best_size = i, d
+        if best is not None:
+            entries[best] = data_axis
+        return P(*entries)
+
+    return jax.tree.map(one, param_specs, param_shapes,
+                        is_leaf=lambda x: x is None or isinstance(
+                            x, (tuple,)) and all(
+                                isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,434 @@
+"""While-aware HLO analysis: FLOPs, HBM bytes, collective bytes per kind.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits a
+``while`` body ONCE, but scan-over-layers executes it ``num_layers`` times
+— an 80-layer model would be undercounted 80x (verified empirically; see
+EXPERIMENTS.md §Dry-run).  This module parses the post-SPMD HLO text,
+builds per-computation symbol tables and the call graph, and multiplies
+everything inside while bodies by the trip count the caller supplies
+(known from the model: num_layers / n_super).
+
+Accounting rules:
+  * FLOPs: ``dot`` = 2 * prod(result) * prod(lhs contracting dims);
+    ``convolution`` approximated as 2 * prod(result) * prod(kernel) /
+    prod(kernel output-feature dim).  Elementwise flops ignored (dots
+    dominate transformer compute; stated in EXPERIMENTS.md).
+  * HBM bytes: operands + result of every top-level instruction in each
+    visited computation.  Fusion bodies (``calls=``) are NOT visited —
+    fusion internals never touch HBM; the fusion instruction itself
+    accounts its operands/results.  Mirrors XLA's bytes_accessed
+    convention at fusion granularity.
+  * Collectives: payload bytes per kind.
+  * while body/condition multiplied by trip_count; conditional branches
+    and calls by 1; ``to_apply`` reducers ignored (scalar lambdas).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(?P<result>\([^=]*?\)|[\w\[\],{}\d]+)"
+    r"\s+(?P<op>[\w\-]+)\((?P<args>.*)$")
+_WHILE_CALL_RE = re.compile(r"(?:body|condition)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(
+    r"(?:true_computation|false_computation|branch_computations)="
+    r"\{?%?([\w\.\-,% ]+)\}?")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shapes_in(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d) \
+            if m.group(2) else ()
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+class Instruction:
+    __slots__ = ("name", "op", "result_shapes", "operand_names", "line",
+                 "args")
+
+    def __init__(self, name, op, result_shapes, operand_names, args, line):
+        self.name = name
+        self.op = op
+        self.result_shapes = result_shapes
+        self.operand_names = operand_names
+        self.args = args
+        self.line = line
+
+    def result_bytes(self) -> int:
+        return _bytes_of(self.result_shapes)
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_line(line: str) -> Optional[Instruction]:
+    line = _COMMENT_RE.sub("", line)
+    m = _LINE_RE.match(line)
+    if not m:
+        return None
+    args = m.group("args")
+    close = _matching(args)
+    inner = args[:close]
+    operands = _OPERAND_RE.findall(inner)
+    return Instruction(m.group(1), m.group("op"),
+                       _shapes_in(m.group("result")), operands, args, line)
+
+
+def _matching(s: str) -> int:
+    depth = 1
+    for i, c in enumerate(s):
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[Instruction]]:
+    comps: Dict[str, List[Instruction]] = {}
+    current: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m = re.search(r"%?([\w\.\-]+)\s*\(", line)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is not None and "=" in line:
+            inst = _parse_line(line)
+            if inst is not None:
+                comps[current].append(inst)
+    return comps
+
+
+def _collective_kind(op: str) -> Optional[str]:
+    for k in COLLECTIVE_KINDS:
+        if op == k or op == k + "-start":
+            return k
+    return None
+
+
+def _dot_flops(inst: Instruction, table: Dict[str, list]) -> float:
+    if not inst.result_shapes or not inst.operand_names:
+        return 0.0
+    res = _elems(inst.result_shapes[0][1])
+    lhs_shapes = table.get(inst.operand_names[0])
+    if not lhs_shapes:
+        return 2.0 * res  # unknown contraction; floor
+    lhs_dims = lhs_shapes[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    k = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * res * k
+
+
+def _conv_flops(inst: Instruction, table: Dict[str, list]) -> float:
+    if not inst.result_shapes or len(inst.operand_names) < 2:
+        return 0.0
+    res = _elems(inst.result_shapes[0][1])
+    ker = table.get(inst.operand_names[1])
+    if not ker:
+        return 2.0 * res
+    kdims = ker[0][1]
+    k_elems = _elems(kdims)
+    out_feat = max(kdims) if kdims else 1
+    return 2.0 * res * max(k_elems // max(out_feat, 1), 1)
+
+
+def analyze(hlo: str, *, while_trip_count: int = 1,
+            score_dims: Optional[Tuple[int, int]] = None
+            ) -> Dict[str, object]:
+    """Full while-aware analysis.  All numbers are per-device.
+
+    ``score_dims=(q_len, kv_len)``: additionally tally the HBM traffic of
+    attention-score-shaped tensors (trailing dims exactly (q, kv)).  This
+    is the traffic a fused flash-attention kernel keeps in VMEM — the
+    §Perf "kernel-adjusted" memory term subtracts it.
+    """
+    comps = _split_computations(hlo)
+    tables = {name: {i.name: i.result_shapes for i in insts}
+              for name, insts in comps.items()}
+
+    called: set = set()
+    for insts in comps.values():
+        for inst in insts:
+            tail = inst.line
+            for m in _WHILE_CALL_RE.finditer(tail):
+                called.add(m.group(1))
+            for m in _BRANCH_RE.finditer(tail):
+                for n in m.group(1).replace("%", "").split(","):
+                    called.add(n.strip())
+            for pat in (r"calls=%?([\w\.\-]+)", r"to_apply=%?([\w\.\-]+)"):
+                m = re.search(pat, tail)
+                if m:
+                    called.add(m.group(1))
+    entries = [n for n in comps if n not in called]
+    if not entries and comps:
+        entries = [max(comps, key=lambda n: len(comps[n]))]
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    copy_bytes = 0.0
+    score_bytes = 0.0
+    coll = {k: 0.0 for k in COLLECTIVE_KINDS}
+    coll_counts = {k: 0 for k in COLLECTIVE_KINDS}
+
+    _CONST_RE = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+
+    def while_trip(inst: Instruction) -> int:
+        """Trip count of one while: parsed from its condition computation
+        (XLA lowers scans to `lt(iv, N)`; N appears as an s32[] constant).
+        Nested scans (layer loop x q-chunk loop) each get their own count.
+        Falls back to the caller-supplied while_trip_count.
+        """
+        m = re.search(r"condition=%?([\w\.\-]+)", inst.line)
+        if not m:
+            return while_trip_count
+        best = 0
+        todo = [m.group(1)]
+        seen = set()
+        while todo:
+            cn = todo.pop()
+            if cn in seen:
+                continue
+            seen.add(cn)
+            for ci in comps.get(cn, ()):
+                cm = _CONST_RE.search(_COMMENT_RE.sub("", ci.line))
+                if cm:
+                    best = max(best, int(cm.group(1)))
+                fm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", ci.line)
+                if fm:
+                    todo.append(fm.group(1))
+        return best if best > 0 else while_trip_count
+
+    def is_score_inst(inst: Instruction) -> bool:
+        # primary: jax.named_scope("attn_scores") metadata — survives SPMD
+        if "attn_scores" in inst.line:
+            return True
+        # fallback: shape match (kv_len, q-or-chunk) on the result
+        if score_dims is None:
+            return False
+        kv = score_dims[0]
+        q_set = set(score_dims[1:])
+        for _, dims in inst.result_shapes:
+            if len(dims) >= 2 and dims[-1] == kv and dims[-2] in q_set:
+                return True
+        return False
+
+    def is_score_shape(shapes) -> bool:
+        if score_dims is None:
+            return False
+        kv = score_dims[0]
+        q_set = set(score_dims[1:])
+        for _, dims in shapes:
+            if len(dims) >= 2 and dims[-1] == kv and dims[-2] in q_set:
+                return True
+        return False
+
+    def score_share(inst: Instruction, table) -> float:
+        """Bytes of this instruction's traffic that are score traffic
+        (scope-tagged instruction: all of it; else score-shaped operands)."""
+        if is_score_inst(inst):
+            return float("inf")  # caller clamps to the instruction's bytes
+        share = 0.0
+        for nm in inst.operand_names:
+            shapes = table.get(nm)
+            if shapes and is_score_shape(shapes):
+                share += _bytes_of(shapes)
+        return share
+
+    def operand_bytes(inst: Instruction, table) -> int:
+        total = 0
+        for nm in inst.operand_names:
+            shapes = table.get(nm)
+            if shapes:
+                total += _bytes_of(shapes)
+        return total
+
+    _SLICE_OPS = ("dynamic-slice", "gather")
+    _UPDATE_OPS = ("dynamic-update-slice", "scatter")
+
+    def fusion_traffic(inst: Instruction) -> float:
+        """HBM traffic of a fusion, derived from its BODY.
+
+        A fusion parameter consumed only by dynamic-slice/gather reads just
+        the slices, not the whole buffer — without this, scan-over-layers
+        counts the full stacked [L, ...] array once PER LAYER (an L x
+        overcount).  A dynamic-update-slice root writes only the update
+        region (the buffer aliases in place).  Mirrors XLA's
+        HloCostAnalysis fusion handling.
+        """
+        m = re.search(r"calls=%?([\w\.\-]+)", inst.line)
+        body = comps.get(m.group(1)) if m else None
+        if not body:
+            return float(inst.result_bytes()
+                         + operand_bytes(inst, tables_for(inst)))
+        body_table = {i.name: i.result_shapes for i in body}
+        # consumers of each parameter
+        consumers: Dict[str, List[Instruction]] = {}
+        params: List[Instruction] = []
+        for bi in body:
+            if bi.op == "parameter":
+                params.append(bi)
+                continue
+            for nm in bi.operand_names:
+                consumers.setdefault(nm, []).append(bi)
+
+        # layout-only ops a real scheduler hoists out of the loop; the
+        # slice behind them reads slice-sized data per iteration
+        _TRANSPARENT = ("bitcast", "reshape", "copy", "transpose")
+
+        def terminal_consumers(name: str, depth: int = 0):
+            """Consumers, looking through layout-only ops."""
+            out: List[Instruction] = []
+            for c in consumers.get(name, []):
+                if c.op in _TRANSPARENT and depth < 8:
+                    out.extend(terminal_consumers(c.name, depth + 1))
+                else:
+                    out.append(c)
+            return out
+
+        read = 0.0
+        for p in params:
+            cons = terminal_consumers(p.name)
+            pbytes = _bytes_of(p.result_shapes)
+            if cons and all(c.op in _SLICE_OPS for c in cons) and pbytes > 0:
+                read += sum(c.result_bytes() for c in cons)
+            else:
+                read += pbytes
+        root = body[-1]
+        if root.op in _UPDATE_OPS and len(root.operand_names) >= 2:
+            upd = body_table.get(root.operand_names[1])
+            written = _bytes_of(upd) if upd else root.result_bytes()
+        else:
+            written = inst.result_bytes()
+        return read + float(written)
+
+    def tables_for(inst: Instruction):
+        # resolves against the computation currently visited; set by visit()
+        return _current_table[0]
+
+    _current_table = [{}]
+
+    def hbm_bytes(inst: Instruction, table) -> float:
+        """HBM traffic of one instruction, slice-aware."""
+        op = inst.op
+        res = inst.result_bytes()
+        if op == "fusion":
+            _current_table[0] = table
+            return fusion_traffic(inst)
+        ops_total = operand_bytes(inst, table)
+        if op in _SLICE_OPS:
+            return 2.0 * res
+        if op in _UPDATE_OPS:
+            biggest = 0
+            for nm in inst.operand_names:
+                shapes = table.get(nm)
+                if shapes:
+                    biggest = max(biggest, _bytes_of(shapes))
+            return 2.0 * max(ops_total - biggest, 0) or 2.0 * res
+        return float(res + ops_total)
+
+    def visit(name: str, mult: float, depth: int = 0) -> None:
+        nonlocal flops, bytes_hbm, copy_bytes, score_bytes
+        insts = comps.get(name)
+        if insts is None or depth > 16:
+            return
+        table = tables[name]
+        for inst in insts:
+            op = inst.op
+            if op == "dot":
+                flops += _dot_flops(inst, table) * mult
+            elif op == "convolution":
+                flops += _conv_flops(inst, table) * mult
+            ck = _collective_kind(op)
+            if ck is not None:
+                payload = max(inst.result_bytes(),
+                              operand_bytes(inst, table))
+                coll[ck] += payload * mult
+                coll_counts[ck] += 1
+            if op in ("copy", "transpose"):
+                copy_bytes += inst.result_bytes() * mult
+            if op and op not in ("parameter", "constant", "tuple",
+                                 "get-tuple-element", "bitcast",
+                                 "after-all"):
+                b = hbm_bytes(inst, table) * mult
+                bytes_hbm += b
+                if score_dims is not None:
+                    score_bytes += min(score_share(inst, table) * mult, b)
+            if op == "while":
+                trips = while_trip(inst)
+                for m in _WHILE_CALL_RE.finditer(inst.line):
+                    visit(m.group(1), mult * trips, depth + 1)
+            elif op == "conditional":
+                for m in _BRANCH_RE.finditer(inst.line):
+                    for n in m.group(1).replace("%", "").split(","):
+                        visit(n.strip(), mult, depth + 1)
+            elif op == "call":
+                m = re.search(r"to_apply=%?([\w\.\-]+)", inst.line)
+                if m:
+                    visit(m.group(1), mult, depth + 1)
+            # fusion bodies deliberately NOT visited (no HBM traffic inside)
+
+    for ent in entries:
+        visit(ent, 1.0)
+
+    return {
+        "flops": flops,
+        "bytes_hbm": bytes_hbm,
+        "copy_bytes": copy_bytes,
+        "score_bytes": score_bytes,
+        "collective_bytes": {**coll, "total": sum(coll.values())},
+        "collective_counts": coll_counts,
+        "num_computations": len(comps),
+        "entry": entries[:3],
+    }
+
+
+def collective_bytes(hlo: str, *, while_trip_count: int = 1):
+    return analyze(hlo, while_trip_count=while_trip_count)["collective_bytes"]
+
+
+def count_collectives(hlo: str):
+    return analyze(hlo)["collective_counts"]

@@ -1,0 +1,64 @@
+"""bebopc CLI (§6.1) end-to-end."""
+import os
+import subprocess
+import sys
+
+SCHEMA = """
+edition = "2026"
+package demo
+struct Point { x: float32; y: float32; }
+message Meta { note(1): string; }
+service Geo { Locate(Point): Point; Track(Point): stream Point; }
+"""
+
+
+def _run(args, cwd):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.core.cli", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_check_build_ids(tmp_path):
+    bop = tmp_path / "demo.bop"
+    bop.write_text(SCHEMA)
+    r = _run(["check", "demo.bop"], tmp_path)
+    assert r.returncode == 0 and "OK" in r.stdout
+
+    r = _run(["ids", "demo.bop"], tmp_path)
+    assert r.returncode == 0
+    assert "/Geo/Locate" in r.stdout and "server_stream" in r.stdout
+
+    r = _run(["build", "demo.bop", "--python-out", "gen",
+              "--descriptor-out", "demo.bin"], tmp_path)
+    assert r.returncode == 0, r.stderr
+    gen = tmp_path / "gen" / "demo_bebop.py"
+    assert gen.is_file()
+    assert (tmp_path / "demo.bin").stat().st_size > 0
+
+    # the generated module is importable and round-trips
+    code = ("import demo_bebop as d\n"
+            "p = d.Point(x=1.5, y=-2.0)\n"
+            "q = d.Point.decode(p.encode())\n"
+            "assert q.x == 1.5 and q.y == -2.0\n"
+            "m = d.Meta(note='hi')\n"
+            "assert d.Meta.decode(m.encode()).note == 'hi'\n"
+            "print('ok')\n")
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + str(tmp_path / "gen")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr
+    assert "ok" in r.stdout
+
+
+def test_cli_reports_errors(tmp_path):
+    bop = tmp_path / "bad.bop"
+    bop.write_text("struct S { x: not_a_type; }")
+    r = _run(["check", "bad.bop"], tmp_path)
+    assert r.returncode == 1
+    assert "error" in r.stderr

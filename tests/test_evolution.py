@@ -1,0 +1,106 @@
+"""Schema evolution rules (paper Table 9), exercised on real wire bytes."""
+import pytest
+
+from repro.core import types as T, wire
+
+
+def test_message_add_field_old_reader_ignores():
+    V1 = T.Message("M", [T.Field("a", T.INT32, tag=1)])
+    V2 = T.Message("M", [T.Field("a", T.INT32, tag=1),
+                         T.Field("b", T.STRING, tag=2)])
+    new_bytes = wire.encode(V2, {"a": 5, "b": "x"})
+    # old reader: tag 2 unknown -> by default skips to end of message
+    old = wire.decode(V1, new_bytes)
+    assert old["a"] == 5
+
+
+def test_message_add_field_new_reader_reads_old():
+    V1 = T.Message("M", [T.Field("a", T.INT32, tag=1)])
+    V2 = T.Message("M", [T.Field("a", T.INT32, tag=1),
+                         T.Field("b", T.STRING, tag=2)])
+    old_bytes = wire.encode(V1, {"a": 5})
+    new = wire.decode(V2, old_bytes)
+    assert new == {"a": 5}
+    assert "b" not in new
+
+
+def test_message_unknown_tag_ordering():
+    """If the new field is encoded BEFORE known tags, an old reader with a
+    skip entry still reads the rest."""
+    V2 = T.Message("M", [T.Field("b", T.STRING, tag=2),
+                         T.Field("a", T.INT32, tag=1)])
+    V1 = T.Message("M", [T.Field("a", T.INT32, tag=1)])
+    # register a skipper for retired/unknown tag 2 (string)
+    V1.retired_tag_skippers = {
+        2: lambda r: r.take(r.u32() + 1)}
+    b = wire.encode(V2, {"b": "zzz", "a": 9})
+    assert wire.decode(V1, b)["a"] == 9
+
+
+def test_message_rename_field_safe():
+    V1 = T.Message("M", [T.Field("old_name", T.INT32, tag=1)])
+    V2 = T.Message("M", [T.Field("new_name", T.INT32, tag=1)])
+    b = wire.encode(V1, {"old_name": 3})
+    assert wire.decode(V2, b) == {"new_name": 3}  # names not on wire
+
+
+def test_struct_field_changes_break():
+    """Structs are positional: adding a field changes every later offset."""
+    V1 = T.Struct("S", [T.Field("a", T.UINT32)])
+    V2 = T.Struct("S", [T.Field("a", T.UINT32), T.Field("b", T.UINT32)])
+    b1 = wire.encode(V1, {"a": 1})
+    with pytest.raises(T.DecodeError):
+        wire.decode(V2, b1)  # overruns: old data too short
+
+
+def test_struct_reorder_breaks_silently_differs():
+    V1 = T.Struct("S", [T.Field("a", T.UINT8), T.Field("b", T.UINT16)])
+    V2 = T.Struct("S", [T.Field("b", T.UINT16), T.Field("a", T.UINT8)])
+    b = wire.encode(V1, {"a": 1, "b": 2})
+    out = wire.decode(V2, b)
+    assert out != {"a": 1, "b": 2}  # wrong values, no error: breaking
+
+
+def test_union_add_branch_safe():
+    V1 = T.Union("U", [T.Branch("A", 1, T.Struct("A", [T.Field("x", T.INT32)]))])
+    V2 = T.Union("U", [T.Branch("A", 1, T.Struct("A", [T.Field("x", T.INT32)])),
+                       T.Branch("B", 2, T.Struct("B", [T.Field("y", T.INT32)]))])
+    b = wire.encode(V1, ("A", {"x": 1}))
+    assert wire.decode(V2, b).name == "A"
+
+
+def test_union_remove_branch_breaks():
+    V2 = T.Union("U", [T.Branch("A", 1, T.Struct("A", [T.Field("x", T.INT32)])),
+                       T.Branch("B", 2, T.Struct("B", [T.Field("y", T.INT32)]))])
+    V1 = T.Union("U", [T.Branch("A", 1, T.Struct("A", [T.Field("x", T.INT32)]))])
+    b = wire.encode(V2, ("B", {"y": 1}))
+    with pytest.raises(T.DecodeError):
+        wire.decode(V1, b)
+
+
+def test_enum_add_value_safe_remove_breaks():
+    E2 = T.Enum("E", {"Z": 0, "A": 1, "B": 2}, base=T.UINT8)
+    E1 = T.Enum("E", {"Z": 0, "A": 1}, base=T.UINT8)
+    b = wire.encode(E2, 2)
+    v = wire.decode(E1, b)   # decodes to raw int; name unknown
+    assert v == 2
+    assert E1.name_of(2) is None
+
+
+def test_checkpoint_manifest_evolution():
+    """Our checkpoint Manifest is a message: a reader built before
+    `data_cursor` existed still reads step/shards."""
+    from repro.checkpoint import format as F
+    OldManifest = T.Message("Manifest", [
+        T.Field("step", T.UINT64, tag=1),
+        T.Field("created", T.TIMESTAMP, tag=2),
+        T.Field("shards", T.Array(F.ShardInfo), tag=3),
+    ])
+    blob = F.encode_manifest(42, [{"path": "s", "tensor_count": 1,
+                                   "byte_size": 10}],
+                             data_cursor=999, mesh_shape=(16, 16),
+                             mesh_axes=("data", "model"))
+    old = wire.decode(OldManifest, blob)
+    assert old["step"] == 42
+    new = F.decode_manifest(blob)
+    assert new["data_cursor"] == 999

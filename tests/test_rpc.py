@@ -1,0 +1,308 @@
+"""RPC protocol integration tests: all four method types, batch pipelining,
+futures, cursors, deadlines, ownership, transports."""
+import threading
+import time
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.core import types as T, wire
+from repro.core.schema import MethodDef, ServiceDef
+from repro.core.rpc import (Channel, Deadline, Router, RpcError, Server,
+                            Status, TcpTransport, connected_pair)
+from repro.core.rpc import wire_types as W
+from repro.core.rpc.deadline import HTTP_HEADER
+
+Req = T.Struct("Req", [T.Field("x", T.INT32)])
+Res = T.Struct("Res", [T.Field("y", T.INT32)])
+
+SVC = ServiceDef("Math", [
+    MethodDef("Double", Req, Res),
+    MethodDef("CountTo", Req, Res, server_stream=True),
+    MethodDef("Sum", Req, Res, client_stream=True),
+    MethodDef("Echo", Req, Res, client_stream=True, server_stream=True),
+    MethodDef("Fail", Req, Res),
+    MethodDef("Slow", Req, Res),
+])
+
+
+class Impl:
+    def Double(self, req, ctx):
+        return {"y": req["x"] * 2}
+
+    def CountTo(self, req, ctx):
+        for i in range(int(ctx.cursor), req["x"]):
+            ctx.set_cursor(i + 1)
+            yield {"y": i}
+
+    def Sum(self, reqs, ctx):
+        return {"y": sum(r["x"] for r in reqs)}
+
+    def Echo(self, reqs, ctx):
+        for r in reqs:
+            yield {"y": r["x"]}
+
+    def Fail(self, req, ctx):
+        raise RpcError(Status.NOT_FOUND, "nope")
+
+    def Slow(self, req, ctx):
+        time.sleep(0.15)
+        ctx.check_deadline()
+        return {"y": req["x"]}
+
+
+@pytest.fixture
+def channel():
+    router = Router()
+    router.add_service(SVC, Impl())
+    server = Server(router)
+    ct, st = connected_pair()
+    server.serve_transport(st, blocking=False)
+    ch = Channel(ct)
+    yield ch
+    ch.close()
+
+
+def test_unary(channel):
+    m = channel.typed(SVC)
+    assert m.Double({"x": 21})["y"] == 42
+
+
+def test_server_stream(channel):
+    m = channel.typed(SVC)
+    assert [r["y"] for r in m.CountTo({"x": 4})] == [0, 1, 2, 3]
+
+
+def test_client_stream(channel):
+    m = channel.typed(SVC)
+    assert m.Sum([{"x": i} for i in range(10)])["y"] == 45
+
+
+def test_duplex(channel):
+    m = channel.typed(SVC)
+    assert [r["y"] for r in m.Echo([{"x": 1}, {"x": 2}])] == [1, 2]
+
+
+def test_error_propagation(channel):
+    m = channel.typed(SVC)
+    with pytest.raises(RpcError) as ei:
+        m.Fail({"x": 0})
+    assert ei.value.code == Status.NOT_FOUND
+
+
+def test_unknown_method(channel):
+    with pytest.raises(RpcError) as ei:
+        channel.call(0xDEADBEEF, b"")
+    assert ei.value.code == Status.UNIMPLEMENTED
+
+
+def test_stream_cursor_resume(channel):
+    """§7.5: drop mid-stream, reconnect with the cursor, no replay."""
+    did = SVC.method("CountTo").id
+    it = channel.call(did, wire.encode(Req, {"x": 6}), server_stream=True)
+    got, cursor = [], 0
+    for item in it:
+        got.append(wire.decode(Res, item.payload)["y"])
+        cursor = item.cursor
+        if len(got) == 3:
+            break
+    it2 = channel.call(did, wire.encode(Req, {"x": 6}), server_stream=True,
+                       cursor=cursor)
+    rest = [wire.decode(Res, i.payload)["y"] for i in it2]
+    assert got + rest == [0, 1, 2, 3, 4, 5]
+
+
+def test_batch_dependency_chain(channel):
+    did = SVC.method("Double").id
+    res = channel.batch([
+        {"method_id": did, "payload": wire.encode(Req, {"x": 3})},
+        {"method_id": did, "input_from": 0},
+        {"method_id": did, "input_from": 1},
+    ])
+    ys = [wire.decode(Res, r["payload"])["y"] for r in res]
+    assert ys == [6, 12, 24]
+
+
+def test_batch_failure_propagates_to_dependents(channel):
+    fid = SVC.method("Fail").id
+    did = SVC.method("Double").id
+    res = channel.batch([
+        {"method_id": fid, "payload": wire.encode(Req, {"x": 1})},
+        {"method_id": did, "input_from": 0},
+        {"method_id": did, "payload": wire.encode(Req, {"x": 1})},
+    ])
+    assert res[0]["status"] == Status.NOT_FOUND
+    assert res[1]["status"] == Status.INVALID_ARGUMENT
+    assert res[2]["status"] == Status.OK  # independent call unaffected
+
+
+def test_batch_rejects_forward_reference(channel):
+    did = SVC.method("Double").id
+    res = channel.batch([
+        {"method_id": did, "input_from": 1},
+        {"method_id": did, "payload": wire.encode(Req, {"x": 1})},
+    ])
+    assert all(r["status"] == Status.INVALID_ARGUMENT for r in res)
+
+
+def test_batch_server_stream_buffered(channel):
+    cid = SVC.method("CountTo").id
+    res = channel.batch([
+        {"method_id": cid, "payload": wire.encode(Req, {"x": 3})}])
+    assert res[0]["status"] == Status.OK
+    ys = [wire.decode(Res, b)["y"] for b in res[0]["stream"]]
+    assert ys == [0, 1, 2]
+
+
+def test_deadline_expired_before_call(channel):
+    m = channel.typed(SVC)
+    with pytest.raises(RpcError) as ei:
+        m.Double({"x": 1}, deadline=Deadline.after(-0.5))
+    assert ei.value.code == Status.DEADLINE_EXCEEDED
+
+
+def test_deadline_expires_mid_handler(channel):
+    m = channel.typed(SVC)
+    with pytest.raises(RpcError) as ei:
+        m.Slow({"x": 1}, deadline=Deadline.after(0.05))
+    assert ei.value.code == Status.DEADLINE_EXCEEDED
+
+
+def test_deadline_http_header_roundtrip():
+    d = Deadline.after(1.0)
+    h = d.to_http_header()
+    d2 = Deadline.from_http_header(h)
+    assert abs(d.cutoff_ns() - d2.cutoff_ns()) < 10 ** 6  # ms precision
+
+
+def test_future_dispatch_resolve(channel):
+    sid = SVC.method("Slow").id
+    h = channel.dispatch_future(sid, wire.encode(Req, {"x": 7}))
+    results = list(channel.resolve_futures([h["id"]]))
+    assert results[0]["status"] == Status.OK
+    assert wire.decode(Res, results[0]["payload"])["y"] == 7
+
+
+def test_future_idempotency_key(channel):
+    sid = SVC.method("Slow").id
+    key = uuid.uuid4()
+    h1 = channel.dispatch_future(sid, wire.encode(Req, {"x": 1}),
+                                 idempotency_key=key)
+    h2 = channel.dispatch_future(sid, wire.encode(Req, {"x": 1}),
+                                 idempotency_key=key)
+    assert h1["id"] == h2["id"]
+    assert h2["existing"] is True
+
+
+def test_future_completed_resolves_immediately(channel):
+    sid = SVC.method("Double").id
+    h = channel.dispatch_future(sid, wire.encode(Req, {"x": 5}))
+    time.sleep(0.2)  # let it complete
+    t0 = time.monotonic()
+    res = list(channel.resolve_futures([h["id"]]))
+    assert time.monotonic() - t0 < 1.0
+    assert res[0]["status"] == Status.OK
+
+
+def test_future_discard_result(channel):
+    sid = SVC.method("Double").id
+    h = channel.dispatch_future(sid, wire.encode(Req, {"x": 5}),
+                                discard_result=True)
+    time.sleep(0.2)
+    with pytest.raises(RpcError) as ei:
+        channel.cancel_future(h["id"])  # result discarded -> NOT_FOUND
+    assert ei.value.code == Status.NOT_FOUND
+
+
+def test_future_ownership():
+    """A caller that does not own a future gets PERMISSION_DENIED (§7.6.1)."""
+    from repro.core.rpc.futures import FutureManager
+    fm = FutureManager()
+    fid, _ = fm.dispatch("alice", lambda: (time.sleep(0.1), b"")[1])
+    with pytest.raises(RpcError) as ei:
+        next(iter(fm.resolve("bob", [fid])))
+    assert ei.value.code == Status.PERMISSION_DENIED
+    with pytest.raises(RpcError):
+        fm.cancel("bob", fid)
+
+
+def test_future_retention_eviction():
+    from repro.core.rpc.futures import InMemoryFutureStorage
+    st = InMemoryFutureStorage(max_completed=2)
+    ids = [uuid.uuid4() for _ in range(3)]
+    for i, fid in enumerate(ids):
+        st.persist("o", fid, {"id": fid, "status": 0})
+    assert st.fetch(ids[0]) is None      # evicted by count
+    assert st.fetch(ids[2]) is not None
+
+
+def test_discovery(channel):
+    d = channel.discover()
+    names = {m["name"] for m in d["methods"]}
+    assert {"Double", "CountTo", "Sum", "Echo"} <= names
+    ids = {m["routing_id"] for m in d["methods"]}
+    assert len(ids) == len(d["methods"])  # no collisions
+
+
+def test_tcp_transport():
+    router = Router()
+    router.add_service(SVC, Impl())
+    server = Server(router)
+    host, port, lsock = server.listen_tcp()
+    ch = Channel(TcpTransport.connect(host, port))
+    try:
+        m = ch.typed(SVC)
+        assert m.Double({"x": 4})["y"] == 8
+        assert [r["y"] for r in m.CountTo({"x": 3})] == [0, 1, 2]
+    finally:
+        ch.close()
+        lsock.close()
+
+
+def test_unary_framing_overhead_is_9_bytes_each_way():
+    """§7.2: 18 bytes of framing overhead for a complete unary RPC."""
+    from repro.core.rpc.framing import HEADER_SIZE, Frame, encode_frame
+    f = encode_frame(Frame(1, b"payload"))
+    assert len(f) - len(b"payload") == HEADER_SIZE == 9
+
+
+def test_reserved_method_ids_cannot_be_registered():
+    router = Router()
+    with pytest.raises(T.SchemaError):
+        router.register_handler(W.METHOD_BATCH, lambda r, c: r)
+
+
+def test_http1_transport_unary():
+    """§7.7: the same protocol over an HTTP/1.1 envelope, no proxies."""
+    from repro.core.rpc.transport import Http1Transport, connected_pair
+
+    router = Router()
+    router.add_service(SVC, Impl())
+    server = Server(router)
+    c_raw, s_raw = connected_pair()
+    http_server = Http1Transport(s_raw, client=False)
+    http_client = Http1Transport(c_raw, client=True)
+    server.serve_transport(http_server, blocking=False)
+    ch = Channel(http_client)
+    try:
+        m = ch.typed(SVC)
+        assert m.Double({"x": 30})["y"] == 60
+        # server-stream frames arrive inside HTTP response bodies
+        assert [r["y"] for r in m.CountTo({"x": 3})] == [0, 1, 2]
+    finally:
+        ch.close()
+
+
+def test_fig2_wire_encoding_sizes():
+    """Paper Fig. 2: uuid + 4 bfloat16 embedding = 28 bytes in Bebop vs 48
+    in protobuf (uuid as 36-char ASCII string)."""
+    from repro.core import varint as V
+    Emb = T.Struct("Emb", [T.Field("id", T.UUID),
+                           T.Field("v", T.Array(T.BFLOAT16))])
+    val = {"id": uuid.UUID("550e8400-e29b-41d4-a716-446655440000"),
+           "v": np.asarray([1.0, 2.0, 3.0, 4.0], np.float32)}
+    b = wire.encode(Emb, val)
+    assert len(b) == 28  # 16B uuid + 4B count + 8B bf16 data
+    v = V.encode(Emb, val)
+    assert len(v) == 48  # 2B tag + 36B ascii uuid + 2B tag + 8B data

@@ -1,0 +1,205 @@
+"""Schema language (§5) + compiler + decorators + descriptor tests."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import types as T
+from repro.core.compiler import CompileError, compile_source
+from repro.core.codegen import generate_python, load_generated
+from repro.core.decorators import LuaError, run_lua
+from repro.core.descriptor import (decode_descriptor_set,
+                                   encode_descriptor_set, topological_order)
+from repro.core.hashing import lowbias32, method_id, murmur3_lowbias32
+from repro.core.parser import parse_duration, parse_iso8601, parse_schema
+
+BASIC = '''
+edition = "2026"
+package my.app
+import "bebop/decorators.bop"
+
+/// Doc comment captured.
+struct Point { x: float32; y: float32; }
+
+enum Status : uint8 { UNKNOWN = 0; ACTIVE = 1; }
+
+message Profile {
+  id(1): uuid;
+  @indexed(unique=true)
+  email(2): string;
+  scores(3): float32[];
+  status(4): Status;
+}
+
+union Result {
+  Success(1): { value: string; };
+  Error(2): { code: int32; message: string; };
+}
+
+const int32 MAX_SIZE = 0x400;
+const duration TIMEOUT = "30s";
+const timestamp EPOCH = "1970-01-01T00:00:00Z";
+const byte[] MAGIC = b"\\x89PNG";
+const string HOST = "localhost";
+
+service Base { Ping(Point): Point; }
+service Chat with Base {
+  Send(Profile): Profile;
+  Subscribe(Point): stream Profile;
+  Upload(stream Point): Profile;
+  Talk(stream Point): stream Point;
+}
+'''
+
+
+@pytest.fixture(scope="module")
+def schema():
+    return compile_source(BASIC, filename="basic.bop")
+
+
+def test_definitions_present(schema):
+    for name in ["Point", "Status", "Profile", "Result", "MAX_SIZE",
+                 "TIMEOUT", "EPOCH", "MAGIC", "HOST", "Base", "Chat"]:
+        assert name in schema.definitions, name
+    assert schema.package == "my.app"
+    assert schema["Point"].doc == "Doc comment captured."
+
+
+def test_constants(schema):
+    assert schema["MAX_SIZE"].value == 1024
+    assert schema["TIMEOUT"].value == T.Duration(30, 0)
+    assert schema["EPOCH"].value == T.Timestamp(0, 0, 0)
+    assert bytes(schema["MAGIC"].value.tobytes()) == b"\x89PNG"
+
+
+def test_service_composition_and_ids(schema):
+    chat = schema["Chat"]
+    names = [m.name for m in chat.methods]
+    assert names[0] == "Ping"  # composed in via `with`
+    kinds = {m.name: m.kind for m in chat.methods}
+    assert kinds == {"Ping": "unary", "Send": "unary",
+                     "Subscribe": "server_stream", "Upload": "client_stream",
+                     "Talk": "duplex"}
+    for m in chat.methods:
+        assert m.id == method_id("Chat", m.name)
+
+
+def test_decorator_export(schema):
+    email = schema["Profile"].field("email")
+    exp = email.decorators[0].exported
+    assert exp["index_name"] == "Profile_email_idx"
+    assert exp["is_unique"] is True
+
+
+def test_validate_block_rejects():
+    bad = '''
+import "bebop/decorators.bop"
+struct S { @validate_range(min=5.0, max=1.0) x: float32; }
+'''
+    with pytest.raises(T.SchemaError):
+        compile_source(bad)
+
+
+def test_decorator_target_mismatch():
+    bad = '''
+import "bebop/decorators.bop"
+@indexed(unique=true)
+struct S { x: float32; }
+'''
+    with pytest.raises(T.SchemaError):
+        compile_source(bad)
+
+
+def test_import_cycle_detected():
+    loader = lambda path, imp: 'import "a.bop"\nstruct B { x: int32; }'  # noqa
+    with pytest.raises(CompileError):
+        compile_source('import "a.bop"\nstruct A { b: int32; }',
+                       filename="a.bop", loader=loader)
+
+
+def test_env_substitution():
+    os.environ["BEBOP_TEST_VAR"] = "hello"
+    s = compile_source('const string X = "$(BEBOP_TEST_VAR)/suffix";')
+    assert s["X"].value == "hello/suffix"
+
+
+def test_duration_literals():
+    assert parse_duration("1h30m") == T.Duration(5400, 0)
+    assert parse_duration("500ms") == T.Duration(0, 500_000_000)
+    assert parse_duration("10us") == T.Duration(0, 10_000)
+    assert parse_duration("-2s") == T.Duration(-2, 0)
+    with pytest.raises(T.SchemaError):
+        parse_duration("10 parsecs")
+
+
+def test_iso8601_ms_precision_offset():
+    ts = parse_iso8601("2024-01-15T10:30:00+12:00:01.133")
+    assert ts.offset_ms == (12 * 3600 + 1) * 1000 + 133
+    ts2 = parse_iso8601("2024-01-15T10:30:00.5Z")
+    assert ts2.ns == 500_000_000
+
+
+def test_nested_visibility():
+    src = '''
+struct Outer {
+  struct Inner { a: int32; }
+  export struct Pub { b: int32; }
+  i: Outer.Inner;
+}
+local struct Priv { x: int32; }
+'''
+    s = compile_source(src)
+    assert s["Outer.Inner"].visibility == "local"
+    assert s["Outer.Pub"].visibility == "export"
+    assert s["Priv"].visibility == "local"
+
+
+def test_codegen_roundtrip(schema):
+    mod = load_generated(schema, "basic_gen")
+    p = mod.Point(x=1.5, y=-2.5)
+    q = mod.Point.decode(p.encode())
+    assert q.x == 1.5 and q.y == -2.5
+    prof = mod.Profile(email="a@b.c", scores=np.asarray([0.5, 1.5], "f4"))
+    back = mod.Profile.decode(prof.encode())
+    assert back.email == "a@b.c"
+    assert np.allclose(back.scores, [0.5, 1.5])
+    assert back.id is None  # absent field
+
+
+def test_codegen_source_is_python(schema):
+    src = generate_python(schema)
+    compile(src, "<gen>", "exec")
+
+
+def test_descriptor_topological_and_roundtrip(schema):
+    order = topological_order(schema)
+    assert order.index("Status") < order.index("Profile")
+    blob = encode_descriptor_set([schema])
+    ds = decode_descriptor_set(blob)
+    defs = {d["name"]: d for d in ds["schemas"][0]["definitions"]}
+    assert defs["Profile"]["kind"] == 3  # MESSAGE
+    svc = defs["Chat"]["service_def"]["methods"]
+    assert all("routing_id" in m for m in svc)
+
+
+def test_murmur3_lowbias32_stable():
+    a = murmur3_lowbias32(b"/Chat/Send")
+    assert a == murmur3_lowbias32(b"/Chat/Send")
+    assert a != murmur3_lowbias32(b"/Chat/Send2")
+    assert 0 <= a < 2 ** 32
+    # lowbias32 reference vector (identity on 0 is not expected)
+    assert lowbias32(0) == 0
+    assert lowbias32(1) != 1
+
+
+def test_mini_lua():
+    env = {"target": {"kind": "FIELD", "name": "email", "parent": "User"},
+           "unique": True}
+    out = run_lua('''
+      local t, f = target.parent, target.name
+      return { idx = t .. "_" .. f, u = unique or false, n = 1 + 2 * 3 }
+    ''', env)
+    assert out == {"idx": "User_email", "u": True, "n": 7}
+    with pytest.raises(LuaError):
+        run_lua('error("boom")', {})
+    assert run_lua('if 1 > 2 then return "a" else return "b" end', {}) == "b"

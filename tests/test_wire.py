@@ -1,0 +1,176 @@
+"""Wire-format unit tests: the paper's §3 worked examples, byte-for-byte."""
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.core import types as T, wire
+
+
+def test_point_struct_bytes():
+    Point = T.Struct("Point", [T.Field("x", T.FLOAT32),
+                               T.Field("y", T.FLOAT32)])
+    b = wire.encode(Point, {"x": 1.0, "y": 2.0})
+    assert b == bytes.fromhex("0000803f00000040")  # §3.8
+    assert wire.decode(Point, b) == {"x": 1.0, "y": 2.0}
+
+
+def test_empty_struct_is_zero_bytes():
+    Empty = T.Struct("Empty", [])
+    assert wire.encode(Empty, {}) == b""
+
+
+def test_string_hello():
+    b = wire.encode(T.STRING, "hello")
+    assert b == bytes.fromhex("0500000068656c6c6f00")  # §3.5
+    assert wire.decode(T.STRING, b) == "hello"
+
+
+def test_string_nul_terminator_checked():
+    b = bytearray(wire.encode(T.STRING, "hi"))
+    b[-1] = 1
+    with pytest.raises(T.DecodeError):
+        wire.decode(T.STRING, bytes(b))
+
+
+def test_map_example():
+    m = T.MapT(T.UINT8, T.INT32)
+    b = wire.encode(m, {1: 100, 2: 200})
+    assert b == bytes.fromhex("020000000164000000" "02c8000000")  # §3.7
+    assert wire.decode(m, b) == {1: 100, 2: 200}
+
+
+def test_map_rejects_float_keys():
+    with pytest.raises(T.SchemaError):
+        T.MapT(T.FLOAT32, T.INT32)
+
+
+def test_union_circle():
+    Shape = T.Union("Shape", [
+        T.Branch("Circle", 1,
+                 T.Struct("Circle", [T.Field("radius", T.FLOAT32)]))])
+    b = wire.encode(Shape, ("Circle", {"radius": 5.0}))
+    assert b == bytes.fromhex("05000000" "01" "0000a040")  # §3.10
+    v = wire.decode(Shape, b)
+    assert v.name == "Circle" and v.discriminator == 1
+    assert v.value == {"radius": 5.0}
+
+
+def test_union_unknown_discriminator():
+    Shape = T.Union("Shape", [
+        T.Branch("Circle", 1,
+                 T.Struct("C", [T.Field("radius", T.FLOAT32)]))])
+    bad = bytes.fromhex("05000000" "07" "0000a040")
+    with pytest.raises(T.DecodeError):
+        wire.decode(Shape, bad)
+
+
+def test_location_message_27_bytes():
+    """§3.11 complete example, including the 27-byte total."""
+    Coord = T.Struct("Coord", [T.Field("x", T.FLOAT32),
+                               T.Field("y", T.FLOAT32)])
+    Location = T.Message("Location", [
+        T.Field("name", T.STRING, tag=1),
+        T.Field("pos", Coord, tag=2),
+        T.Field("alt", T.FLOAT32, tag=3)])
+    v = {"name": "HQ", "pos": {"x": 1.0, "y": 2.0}, "alt": 100.0}
+    b = wire.encode(Location, v)
+    assert len(b) == 27
+    expect = bytes.fromhex("17000000" "01" "02000000" "485100" "02"
+                           "0000803f" "00000040" "03" "0000c842" "00")
+    assert b == expect
+    assert wire.decode(Location, b) == v
+
+
+def test_message_absent_fields_not_encoded():
+    M = T.Message("M", [T.Field("a", T.INT32, tag=1),
+                        T.Field("b", T.STRING, tag=2)])
+    b = wire.encode(M, {"a": 7})
+    v = wire.decode(M, b)
+    assert v == {"a": 7}
+    assert "b" not in v  # "not set" distinct from "set to default" (§2.2)
+
+
+def test_timestamp_wire():
+    ts = T.Timestamp(1000, 999999488, 32400000)
+    b = wire.encode(T.TIMESTAMP, ts)
+    # paper §3.3.1 labels ns=999999488; its printed hex shows 1e9 which is
+    # internally inconsistent — we encode the stated VALUE
+    assert b == bytes.fromhex("e803000000000000" "00c89a3b" "8062ee01")
+    assert wire.decode(T.TIMESTAMP, b) == ts
+
+
+def test_duration_wire():
+    d = T.Duration(60, 0)
+    b = wire.encode(T.DURATION, d)
+    assert b == bytes.fromhex("3c00000000000000" "00000000")  # §3.3.2
+    assert wire.decode(T.DURATION, b) == d
+
+
+def test_negative_duration_sign_rule():
+    with pytest.raises(ValueError):
+        T.Duration(-1, 5)  # both fields must share sign (§3.3.2)
+    d = T.Duration(-1, -500)
+    assert wire.decode(T.DURATION, wire.encode(T.DURATION, d)) == d
+
+
+def test_uuid_canonical_bytes():
+    u = uuid.UUID("550e8400-e29b-41d4-a716-446655440000")
+    b = wire.encode(T.UUID, u)
+    assert b == bytes.fromhex("550e8400e29b41d4a716446655440000")  # §3.4
+    assert wire.decode(T.UUID, b) == u
+
+
+def test_int128_low_bytes_first():
+    v = 2 ** 64 + 5
+    b = wire.encode(T.INT128, v)
+    assert b[:8] == (5).to_bytes(8, "little")   # low 8 bytes first (§3.2)
+    assert b[8:] == (1).to_bytes(8, "little")
+    assert wire.decode(T.INT128, b) == v
+
+
+def test_bfloat16_array_roundtrip():
+    arr = np.array([1.0, 2.0, 3.0, 4.0], dtype=np.float32)
+    b = wire.encode(T.Array(T.BFLOAT16), arr)
+    assert b == bytes.fromhex("04000000" "803f" "0040" "4040" "8040")
+    assert np.allclose(wire.decode(T.Array(T.BFLOAT16), b), arr)
+
+
+def test_fixed_array_no_prefix():
+    fa = T.FixedArray(T.UINT16, 3)
+    b = wire.encode(fa, [1, 2, 3])
+    assert len(b) == 6  # no count prefix (§3.6)
+    with pytest.raises(T.EncodeError):
+        wire.encode(fa, [1, 2])
+
+
+def test_fixed_array_max_size():
+    with pytest.raises(T.SchemaError):
+        T.FixedArray(T.BYTE, 65536)
+
+
+def test_decode_bounds_checked():
+    Point = T.Struct("P", [T.Field("x", T.FLOAT64)])
+    with pytest.raises(T.DecodeError):
+        wire.decode(Point, b"\x00\x00")
+
+
+def test_nested_struct_inline_zero_overhead():
+    Inner = T.Struct("I", [T.Field("a", T.UINT32)])
+    Outer = T.Struct("O", [T.Field("i", Inner), T.Field("b", T.UINT32)])
+    b = wire.encode(Outer, {"i": {"a": 1}, "b": 2})
+    assert len(b) == 8  # §3.8: no additional overhead
+
+
+def test_enum_default_zero_required():
+    with pytest.raises(T.SchemaError):
+        T.Enum("E", {"A": 1, "B": 2})
+    e = T.Enum("E", {"Z": 0, "A": 1}, base=T.UINT8)
+    assert wire.encode(e, 1) == b"\x01"
+
+
+def test_message_tag_range():
+    with pytest.raises(T.SchemaError):
+        T.Message("M", [T.Field("a", T.INT32, tag=256)])
+    with pytest.raises(T.SchemaError):
+        T.Message("M", [T.Field("a", T.INT32, tag=0)])
