@@ -1,0 +1,122 @@
+"""Serving ingest benchmark: host-parse vs device-decode admission.
+
+The question this answers: when a batched inference payload is N records of
+S bytes each, what does it cost to turn the wire bytes into model-ready
+tensors?
+
+  * ``host_parse``   — the conventional path: each record is decoded on the
+    host by the reference codec (core/wire.py), field at a time, the rows
+    are stacked, and the result is placed on the device.  This is what any
+    per-request ingest does, minus the varint penalty JSON/protobuf
+    formats add on top.
+  * ``device_decode`` — the serving path (serving/ingest.py): one page is
+    header-validated, its raw bytes are placed on the device (64B-aligned
+    staging, zero-copy transfer), and the bebop_decode kernel materializes
+    every column in a single pass.  ``device_decode_crc`` adds the CRC32
+    admission check (production default) for transparency.
+
+The record is a realistic inference request row — request id, sampling
+parameters, then the token payload:
+
+    struct InferRecord{K} {
+      request_id:  uuid;        seq:        uint32;
+      max_new:     uint32;      stop_token: int32;
+      temperature: float32;     top_p:      float32;
+      tokens:      uint32[K];
+    }
+
+Record sizes sweep ~1 KB -> ~64 KB of tokens with 128 records per batch —
+the shape of a continuously-batched prefill payload.  Both paths end with
+device-resident tensors; the derived column reports effective GB/s over
+the payload and the host/device speedup.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import fastwire, pages, wire
+from repro.core import types as T
+from repro.serving.ingest import PageIngest
+from .timing import bench
+
+
+def infer_record_struct(k: int) -> T.Struct:
+    return T.Struct(f"InferRecord{k}", [
+        T.Field("request_id", T.UUID),
+        T.Field("seq", T.UINT32),
+        T.Field("max_new", T.UINT32),
+        T.Field("stop_token", T.INT32),
+        T.Field("temperature", T.FLOAT32),
+        T.Field("top_p", T.FLOAT32),
+        T.Field("tokens", T.FixedArray(T.UINT32, k)),
+    ])
+
+
+def _make_records(s: T.Struct, n: int, k: int, rng) -> np.ndarray:
+    recs = np.zeros(n, dtype=fastwire.static_dtype(s))
+    recs["request_id"] = rng.integers(0, 255, (n, 16), dtype=np.uint8)
+    recs["seq"] = k
+    recs["max_new"] = 16
+    recs["stop_token"] = -1
+    recs["temperature"] = 0.7
+    recs["top_p"] = 0.95
+    recs["tokens"] = rng.integers(0, 2 ** 31, (n, k), dtype=np.uint32)
+    return recs
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 128
+    counts = [256, 1024, 4096] if quick else [256, 1024, 4096, 16384]
+    for k in counts:
+        s = infer_record_struct(k)
+        recs = _make_records(s, n, k, rng)
+        rec_bytes = recs.dtype.itemsize
+        page = pages.write_page(s.name, recs)
+
+        ingest = PageIngest(verify=False)
+        ingest.register(s)
+        ingest_crc = PageIngest(verify=True)
+        ingest_crc.register(s)
+
+        import jax
+
+        def device_path(ing=ingest):
+            res = ing.admit(page)
+            jax.block_until_ready(res.columns["tokens"])
+            return res
+
+        out = device_path()  # warmup (jit) + correctness
+        assert np.array_equal(
+            np.asarray(out.columns["tokens"]).astype(np.uint32),
+            recs["tokens"])
+        device_path(ingest_crc)
+
+        rec_bufs = [recs[i:i + 1].tobytes() for i in range(n)]
+
+        def host_path():
+            decoded = [wire.decode(s, rb) for rb in rec_bufs]
+            toks = np.stack([d["tokens"] for d in decoded]).astype(np.int32)
+            return jax.block_until_ready(jax.device_put(toks))
+
+        assert np.array_equal(np.asarray(host_path()).astype(np.uint32),
+                              recs["tokens"])
+
+        payload = n * rec_bytes
+        t_host, cv_h = bench(host_path, min_time_s=0.05, repeats=3)
+        t_dev, cv_d = bench(device_path, min_time_s=0.05, repeats=3)
+        t_crc, _ = bench(lambda: device_path(ingest_crc),
+                         min_time_s=0.05, repeats=3)
+        rows.append((f"serve_ingest.host_parse.{rec_bytes}B",
+                     t_host * 1e6,
+                     f"GBps={payload / t_host / 1e9:.2f} cv={cv_h:.3f}"))
+        rows.append((f"serve_ingest.device_decode.{rec_bytes}B",
+                     t_dev * 1e6,
+                     f"GBps={payload / t_dev / 1e9:.2f} "
+                     f"speedup={t_host / t_dev:.2f}x cv={cv_d:.3f}"))
+        rows.append((f"serve_ingest.device_decode_crc.{rec_bytes}B",
+                     t_crc * 1e6,
+                     f"GBps={payload / t_crc / 1e9:.2f} "
+                     f"speedup={t_host / t_crc:.2f}x"))
+    return rows

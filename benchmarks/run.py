@@ -13,26 +13,39 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated module suffixes "
                          "(decode,throughput,json,roundtrip,wiresize,"
-                         "varint_model,rpc,kernels)")
+                         "varint_model,rpc,kernels,serve_ingest)")
     args = ap.parse_args()
 
-    from . import (bench_decode, bench_json, bench_kernels, bench_roundtrip,
-                   bench_rpc, bench_throughput, bench_varint_model,
-                   bench_wiresize)
-    modules = {
-        "decode": bench_decode,          # Table 4
-        "throughput": bench_throughput,  # Table 5 / Fig 3
-        "json": bench_json,              # Table 6
-        "roundtrip": bench_roundtrip,    # Table 7
-        "wiresize": bench_wiresize,      # Table 8 / Fig 2
-        "varint_model": bench_varint_model,  # Eq 1 / Fig 1
-        "rpc": bench_rpc,                # §7.3 / §7.6
-        "kernels": bench_kernels,        # device decode layer
-    }
+    import importlib
+    modules = {}
+    # Modules import lazily and individually: an optional dependency missing
+    # from one table (e.g. orjson for the JSON comparison) must not take
+    # down the rest of the suite, especially in CI.
+    for key in ("decode",        # Table 4
+                "throughput",    # Table 5 / Fig 3
+                "json",          # Table 6
+                "roundtrip",     # Table 7
+                "wiresize",      # Table 8 / Fig 2
+                "varint_model",  # Eq 1 / Fig 1
+                "rpc",           # §7.3 / §7.6
+                "kernels",       # device decode layer
+                "serve_ingest"):  # wire->device serving path (§8)
+        try:
+            modules[key] = importlib.import_module(f".bench_{key}", __package__)
+        except ImportError as e:
+            modules[key] = e
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     for key, mod in modules.items():
         if only is not None and key not in only:
+            continue
+        if isinstance(mod, ImportError):
+            # Only a missing THIRD-PARTY dependency is a skip; a broken
+            # import inside this package is a real error and must say so.
+            internal = (mod.name or "").startswith(("benchmarks", "repro", "."))
+            tag = "ERROR" if internal else "SKIPPED"
+            print(f"{key}.{tag},0,missing dependency: {mod.name or mod}"
+                  if not internal else f"{key}.{tag},0,{mod!r}", flush=True)
             continue
         try:
             rows = mod.run(quick=args.quick)

@@ -16,10 +16,12 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.core import wire
 from repro.core.rpc import Channel, Deadline, RpcError, Status, TcpTransport
-from repro.serving import Engine, ServeConfig, build_server
+from repro.serving import (Engine, ServeConfig, build_server,
+                           decode_token_page, encode_prompt_page)
 from repro.serving.service import (GenerateRequest, GenerateResponse,
-                                   InferenceService, ScoreResponse,
-                                   TokenChunk, TokenizeRequest)
+                                   InferenceService, InferRequest,
+                                   ScoreResponse, TokenChunk,
+                                   TokenizeRequest)
 
 
 def main() -> None:
@@ -93,6 +95,25 @@ def main() -> None:
     except RpcError as e:
         print(f"[deadline] expired work shed before prefill: "
               f"{Status.name(e.code)}")
+
+    # 6. the wire->device path (§8): page in, device decode, page out
+    page = encode_prompt_page(prompt.reshape(1, 8))
+    t0 = time.perf_counter()
+    res = inf.Infer({"page": page, "max_new_tokens": 6})
+    out = decode_token_page(bytes(bytearray(res["page"])))
+    print(f"[infer] page->device->page in "
+          f"{1e3 * (time.perf_counter() - t0):.1f} ms: {list(out[0])} "
+          f"(host parsed 0 tokens)")
+    iid = InferenceService.method("Infer").id
+    spid = InferenceService.method("ScorePage").id
+    batch = ch.batch([
+        {"method_id": iid, "payload": wire.encode(
+            InferRequest, {"page": page, "max_new_tokens": 6})},
+        {"method_id": spid, "input_from": 0},
+    ])
+    score = wire.decode(ScoreResponse, batch[1]["payload"])["scores"][0]
+    print(f"[infer] Infer->ScorePage pipelined server-side; "
+          f"score={score:.3f}")
 
     ch.close()
     lsock.close()

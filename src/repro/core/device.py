@@ -134,7 +134,11 @@ def decode_page_device(payload_u8, layout: DeviceLayout,
     return {c.name: o for c, o in zip(layout.columns, outs)}
 
 
-def _default_out(wire_dtype: str) -> str:
+def default_out_dtype(wire_dtype: str) -> str:
+    """Model-facing dtype a wire column decodes to unless overridden."""
     return {"uint32": "int32", "int32": "int32", "float32": "float32",
             "uint16": "uint16", "bfloat16": "float32", "float16": "float32",
             "uint8": "uint8"}[wire_dtype]
+
+
+_default_out = default_out_dtype

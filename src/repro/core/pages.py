@@ -128,6 +128,11 @@ def read_payload(buf, offset: int = 0, *, verify: bool = True,
     h = read_header(buf, offset)
     if expect_schema is not None and h.schema_hash != schema_hash(expect_schema):
         raise PageError(f"schema mismatch: page does not hold {expect_schema}")
+    logical = h.record_count * h.record_stride
+    if not h.compressed and h.payload_bytes != logical:
+        raise PageError(
+            f"payload size mismatch: header stores {h.payload_bytes} bytes "
+            f"for {h.record_count}x{h.record_stride} records")
     start = offset + HEADER_SIZE
     stored = memoryview(buf)[start:start + h.payload_bytes]
     if len(stored) < h.payload_bytes:
@@ -135,13 +140,17 @@ def read_payload(buf, offset: int = 0, *, verify: bool = True,
     if h.compressed:
         import zstandard
         raw: bytes = zstandard.ZstdDecompressor().decompress(
-            bytes(stored), max_output_size=h.record_count * h.record_stride)
+            bytes(stored), max_output_size=logical)
+        if len(raw) != logical:
+            raise PageError(
+                f"decompressed payload is {len(raw)} bytes, header promises "
+                f"{logical}")
     else:
         raw = stored  # type: ignore[assignment]
     if verify:
         if zlib.crc32(bytes(raw) if h.compressed else raw) != h.payload_crc32:
             raise PageError("payload CRC mismatch (corrupt page)")
-    arr = np.frombuffer(raw, dtype="u1", count=h.record_count * h.record_stride)
+    arr = np.frombuffer(raw, dtype="u1", count=logical)
     return arr.reshape(h.record_count, h.record_stride)
 
 

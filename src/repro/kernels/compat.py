@@ -1,0 +1,55 @@
+"""Version-compat shims for ``jax.experimental.pallas.tpu``.
+
+jax has renamed the TPU compiler-params dataclass across releases
+(``TPUCompilerParams`` on the 0.4.x line, ``CompilerParams`` on newer
+builds), and the accepted fields drift between versions.  Every Pallas
+kernel in this package routes through :func:`tpu_compiler_params` so the
+kernels import and run on either API instead of failing with an
+``AttributeError`` at trace time.
+
+The shim degrades gracefully:
+
+  * whichever of ``CompilerParams`` / ``TPUCompilerParams`` exists is used;
+  * keyword arguments the installed class does not know are dropped (they
+    are scheduling hints, never correctness requirements);
+  * if the TPU backend module is missing entirely (CPU-only builds),
+    ``None`` is returned, which ``pl.pallas_call`` accepts as "defaults".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+try:  # pragma: no cover - import shape depends on the installed jax
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None  # type: ignore[assignment]
+
+
+def tpu_params_class() -> Optional[type]:
+    """The installed pallas-TPU compiler-params class, or None."""
+    if pltpu is None:
+        return None
+    return (getattr(pltpu, "CompilerParams", None)
+            or getattr(pltpu, "TPUCompilerParams", None))
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """Build compiler params under whichever name this jax exposes.
+
+    Unknown keywords are dropped rather than raised: dimension semantics
+    and friends are performance hints, and a kernel must stay runnable
+    (interpret mode included) on every supported jax.
+    """
+    cls = tpu_params_class()
+    if cls is None:
+        return None
+    if dataclasses.is_dataclass(cls):
+        allowed = {f.name for f in dataclasses.fields(cls)}
+        kwargs = {k: v for k, v in kwargs.items() if k in allowed}
+    try:
+        return cls(**kwargs)
+    except TypeError:
+        # Non-dataclass variant with a stricter signature: fall back to
+        # defaults rather than failing the kernel launch.
+        return cls()

@@ -18,23 +18,41 @@ import jax.numpy as jnp
 # --------------------------------------------------------------------------
 
 
+def _compose_le(sl: jax.Array, n: int, count: int, width: int, dtype
+                ) -> jax.Array:
+    """Little-endian byte compose via shift-or.
+
+    Bit-identical to ``bitcast_convert_type`` on the reshaped byte groups,
+    but XLA:CPU vectorizes the shift-or form ~2x better than the
+    narrow-to-wide bitcast, and it widens into the output dtype in the same
+    pass (no separate ``astype`` sweep).
+    """
+    b = sl.reshape(n, count, width).astype(dtype)
+    out = b[..., 0]
+    for i in range(1, width):
+        out = out | (b[..., i] << (8 * i))
+    return out
+
+
 def bytes_to_u32(pages: jax.Array, offset: int, count: int) -> jax.Array:
     """[N, stride] u8 -> [N, count] u32 starting at byte ``offset`` (LE)."""
     n = pages.shape[0]
     sl = jax.lax.slice(pages, (0, offset), (n, offset + 4 * count))
-    return jax.lax.bitcast_convert_type(
-        sl.reshape(n, count, 4), jnp.uint32)
+    return _compose_le(sl, n, count, 4, jnp.uint32)
 
 
 def bytes_to_i32(pages: jax.Array, offset: int, count: int) -> jax.Array:
-    return bytes_to_u32(pages, offset, count).astype(jnp.int32)
+    # Composing directly in int32 gives the same two's-complement bits as
+    # bitcast-then-astype without the extra pass.
+    n = pages.shape[0]
+    sl = jax.lax.slice(pages, (0, offset), (n, offset + 4 * count))
+    return _compose_le(sl, n, count, 4, jnp.int32)
 
 
 def bytes_to_u16(pages: jax.Array, offset: int, count: int) -> jax.Array:
     n = pages.shape[0]
     sl = jax.lax.slice(pages, (0, offset), (n, offset + 2 * count))
-    return jax.lax.bitcast_convert_type(
-        sl.reshape(n, count, 2), jnp.uint16)
+    return _compose_le(sl, n, count, 2, jnp.uint16)
 
 
 def bytes_to_f32(pages: jax.Array, offset: int, count: int) -> jax.Array:

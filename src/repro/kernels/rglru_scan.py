@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import tpu_compiler_params
+
 
 def _rglru_kernel(x_ref, a_ref, h_ref, h_final_ref, state_ref, *,
                   chunk: int, n_chunks: int):
@@ -71,7 +73,7 @@ def rglru_scan(x: jax.Array, a: jax.Array, *, chunk: int = 256,
         ],
         scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
         grid=(b, n_chunks),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, a)

@@ -1,4 +1,25 @@
-"""Serving: engine (prefill/decode) + Bebop-RPC inference service."""
-from .engine import Engine, ServeConfig  # noqa: F401
+"""Serving: the wire->device inference path.
+
+Three layers, one subsystem:
+
+  * :mod:`.ingest` — RPC page payloads (``[N, stride]`` u8 Bebop pages) are
+    header-validated, DMA'd to the device raw, and materialized into
+    model-ready tensors by the ``bebop_decode`` Pallas kernel.  Decode
+    plans (core/device.py column layouts) are cached by the page header's
+    ``schema_hash``, so steady-state admission never walks a type tree —
+    the paper's "GPU-side deserialization for direct device memory
+    placement" (§8) as a serving component.
+  * :mod:`.engine` — jitted prefill/decode steps plus
+    :class:`ContinuousBatcher`: an admission queue with per-request
+    deadlines and batch assembly across in-flight requests.
+  * :mod:`.service` — the Bebop-RPC ``Inference`` service.  ``Infer`` /
+    ``InferStream`` / ``ScorePage`` speak fixed-layout pages in both
+    directions (the host never parses a token) and compose under batch
+    pipelining, so prefill->decode->score chains resolve server-side in
+    one round trip.
+"""
+from .engine import (ContinuousBatcher, Engine, ServeConfig,  # noqa: F401
+                     ShedError)
+from .ingest import DecodePlan, IngestResult, PageIngest, PlanCache  # noqa: F401
 from .service import (InferenceService, InferenceImpl,  # noqa: F401
-                      build_server)
+                      build_server, decode_token_page, encode_prompt_page)

@@ -1,13 +1,23 @@
-"""Serving engine: jitted prefill/decode steps + simple continuous batching.
+"""Serving engine: jitted prefill/decode steps + continuous batching.
 
 `prefill_step` and `decode_step` here are exactly what the multi-pod
 dry-run lowers for the inference shapes (prefill_32k / decode_32k /
 long_500k): one new token against a KV cache (or recurrent state) of
 ``seq_len``.
+
+:class:`ContinuousBatcher` is the scheduler in front of the engine: an
+admission queue of in-flight requests, per-request deadlines
+(core/rpc/deadline.py), and batch assembly — concurrent RPC requests with
+compatible shapes are concatenated along the batch axis and run as ONE
+prefill+decode sequence, then the rows are split back per request.  Expired
+requests are shed at admission and at assembly, before any device work.
 """
 from __future__ import annotations
 
+import collections
+import concurrent.futures as _cf
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -56,7 +66,7 @@ class Engine:
         and skips past what the client already has).
         """
         cfg, sc = self.cfg, self.serve
-        maxn = max_new_tokens or sc.max_new_tokens
+        maxn = sc.max_new_tokens if max_new_tokens is None else max_new_tokens
         b, t = tokens.shape
         batch = self._prefill_batch(tokens)
         logits, cache = self._prefill(self.params, batch)
@@ -111,3 +121,219 @@ class Engine:
         picked = jnp.take_along_axis(
             lf, jnp.asarray(tokens[:, 1:])[..., None], axis=-1)[..., 0]
         return np.asarray(jnp.mean(picked, axis=-1))
+
+
+# --------------------------------------------------------------------------
+# Continuous batching
+# --------------------------------------------------------------------------
+
+
+class ShedError(RuntimeError):
+    """Request dropped by the scheduler (queue overflow or expired deadline)."""
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One admitted request group: [B, T] prompt rows awaiting assembly."""
+
+    tokens: np.ndarray
+    max_new_tokens: int
+    stop_token: Optional[int]
+    deadline: Optional[Any]
+    future: _cf.Future
+    enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
+
+    @property
+    def rows(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def seq_len(self) -> int:
+        return self.tokens.shape[1]
+
+    def expired(self) -> bool:
+        return self.deadline is not None and self.deadline.expired()
+
+
+class ContinuousBatcher:
+    """Admission queue + batch assembly in front of a single Engine.
+
+    Requests are submitted from RPC handler threads and resolved by one
+    worker thread.  Assembly greedily merges queued requests that share a
+    prompt length and stop token (prefill is shape-polymorphic only across
+    the batch axis) up to ``max_batch`` rows, waiting at most ``window_s``
+    for stragglers once the first request is in hand — the classic
+    throughput/latency knob.  Deadlines shed work twice: on submit (full
+    queue or already expired) and again at assembly, so an expired request
+    never reaches the device.
+    """
+
+    def __init__(self, engine: Engine, *, max_batch: Optional[int] = None,
+                 max_queue: int = 64, window_s: float = 0.005):
+        self.engine = engine
+        self.max_batch = max_batch or engine.serve.max_batch
+        self.max_queue = max_queue
+        self.window_s = window_s
+        self._queue: collections.deque = collections.deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self.stats = {"requests": 0, "rows": 0, "batches": 0,
+                      "batched_rows": 0, "shed": 0}
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="serve-batcher")
+        self._worker.start()
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, tokens: np.ndarray, *,
+               max_new_tokens: Optional[int] = None,
+               stop_token: Optional[int] = None,
+               deadline=None) -> _cf.Future:
+        """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32."""
+        tokens = np.atleast_2d(np.asarray(tokens, dtype=np.int32))
+        maxn = self.engine.serve.max_new_tokens if max_new_tokens is None \
+            else max_new_tokens  # explicit 0 = prefill-only, not the default
+        p = _Pending(tokens, maxn, stop_token, deadline, _cf.Future())
+        with self._cond:
+            if self._closed:
+                self.stats["shed"] += 1
+                p.future.set_exception(ShedError("batcher closed"))
+                return p.future
+            if p.expired():
+                self.stats["shed"] += 1
+                p.future.set_exception(
+                    ShedError("deadline expired before admission"))
+                return p.future
+            if len(self._queue) >= self.max_queue:
+                self.stats["shed"] += 1
+                p.future.set_exception(ShedError("admission queue full"))
+                return p.future
+            self._queue.append(p)
+            self.stats["requests"] += 1
+            self.stats["rows"] += p.rows
+            self._cond.notify()
+        return p.future
+
+    def generate(self, tokens: np.ndarray, **kw) -> np.ndarray:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(tokens, **kw).result()
+
+    # -- assembly -----------------------------------------------------------
+    def _take_group(self, timeout: Optional[float]) -> Optional[_Pending]:
+        """Pop the first live request, shedding expired ones in place."""
+        with self._cond:
+            end = None if timeout is None else time.monotonic() + timeout
+            while True:
+                while self._queue:
+                    p = self._queue.popleft()
+                    if p.expired():
+                        self.stats["shed"] += 1
+                        p.future.set_exception(
+                            ShedError("deadline expired in queue"))
+                        continue
+                    return p
+                if self._closed:
+                    return None
+                remaining = None if end is None else end - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._cond.wait(remaining)
+
+    def _take_compatible(self, head: _Pending) -> List[_Pending]:
+        """Merge queued requests matching ``head`` up to max_batch rows."""
+        group = [head]
+        rows = head.rows
+        cutoff = time.monotonic() + self.window_s
+        while rows < self.max_batch:
+            with self._cond:
+                found = None
+                shed = False
+                for p in self._queue:
+                    if p.expired():
+                        self._queue.remove(p)
+                        self.stats["shed"] += 1
+                        p.future.set_exception(
+                            ShedError("deadline expired in queue"))
+                        shed = True
+                        break  # deque mutated mid-iteration; rescan
+                    if p.seq_len == head.seq_len \
+                            and p.stop_token == head.stop_token \
+                            and rows + p.rows <= self.max_batch:
+                        found = p
+                        break
+                if found is not None:
+                    self._queue.remove(found)
+                    group.append(found)
+                    rows += found.rows
+                    continue
+                if shed:
+                    continue  # don't burn the window waiting; rescan now
+                remaining = cutoff - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+        return group
+
+    def _run(self) -> None:
+        while True:
+            head = self._take_group(None)
+            if head is None:
+                return
+            group = self._take_compatible(head)
+            try:
+                self._execute(group)
+            except Exception:  # noqa: BLE001 - the worker must survive
+                # _execute fails futures itself; anything escaping here
+                # (e.g. InvalidStateError from a racing cancel) must not
+                # kill the only worker thread.
+                continue
+
+    def _execute(self, group: List[_Pending]) -> None:
+        tokens = np.concatenate([p.tokens for p in group], axis=0) \
+            if len(group) > 1 else group[0].tokens
+        maxn = max(p.max_new_tokens for p in group)
+        # Run to the LATEST member deadline: early members get their full
+        # generation; an expired-by-then straggler still gets the prefix.
+        deadline = None
+        if all(p.deadline is not None for p in group):
+            deadline = max((p.deadline for p in group),
+                           key=lambda d: d.cutoff_ns())
+        try:
+            out = self.engine.generate(tokens, max_new_tokens=maxn,
+                                       stop_token=group[0].stop_token,
+                                       deadline=deadline)
+        except Exception as e:  # noqa: BLE001 - fail every member, keep serving
+            for p in group:
+                if not p.future.done():
+                    p.future.set_exception(e)
+            return
+        self.stats["batches"] += 1
+        self.stats["batched_rows"] += tokens.shape[0]
+        row = 0
+        for p in group:
+            res = out[row:row + p.rows, :min(p.max_new_tokens, out.shape[1])]
+            row += p.rows
+            if p.stop_token is not None:
+                # Re-apply the request's own stop rule: solo generation ends
+                # at the first step where every row of THIS request emits
+                # the stop token; merged batches run longer, so trim back to
+                # keep responses independent of what they were batched with.
+                hits = (res == p.stop_token).all(axis=0)
+                if hits.any():
+                    res = res[:, :int(np.argmax(hits))]
+            if not p.future.done():  # racing cancel() must not kill us
+                p.future.set_result(np.ascontiguousarray(res))
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._worker.join(timeout=5.0)
+        with self._cond:
+            while self._queue:
+                p = self._queue.popleft()
+                p.future.set_exception(ShedError("batcher closed"))
+
+    def mean_batch_rows(self) -> float:
+        b = self.stats["batches"]
+        return self.stats["batched_rows"] / b if b else 0.0

@@ -8,27 +8,44 @@ the DSL here so it is importable without the compiler):
       Generate(GenerateRequest): GenerateResponse; // unary generation
       Stream(GenerateRequest): stream TokenChunk;  // cursor-resumable stream
       Score(TokenBatch): ScoreResponse;            // logprob scoring
+      Infer(InferRequest): InferResponse;          // page in, page out
+      InferStream(InferRequest): stream InferChunk;// page-encoded streaming
+      ScorePage(InferResponse): ScoreResponse;     // score a token page
     }
 
 Everything the paper contributes is exercised on a real model here:
-  * batch pipelining: Tokenize -> Generate -> Score dependency chains run
-    in ONE round trip (`input_from` forwarding)
-  * stream cursors: a dropped Stream call resumes from the last delivered
-    token index without re-decoding delivered tokens
+  * batch pipelining: Tokenize -> Generate -> Score AND Infer -> ScorePage
+    dependency chains run in ONE round trip (`input_from` forwarding), so
+    the prefill->decode->score hop never leaves the server
+  * stream cursors: a dropped Stream/InferStream call resumes from the last
+    delivered token index without re-decoding delivered tokens
   * futures: long generations dispatch with idempotency keys; results are
     pushed on the resolve stream
   * deadline propagation: expired deadlines shed work before prefill
+
+``Infer``/``InferStream`` are the device-resident path (§4.4, §8): the
+request payload is a Bebop *page* of fixed-layout prompt records.  The
+handler validates the header, DMAs the raw bytes to the device, and the
+``bebop_decode`` Pallas kernel materializes the token matrix
+(serving/ingest.py, plan cache keyed by schema hash).  Generation runs
+under the continuous-batching scheduler (serving/engine.py) so concurrent
+Infer calls share one prefill+decode sequence.  The response is itself a
+fixed-layout page — the host never parses a token in either direction.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+import queue as _queue
+import threading
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 
+from ..core import fastwire, pages
 from ..core import types as T
 from ..core.schema import MethodDef, ServiceDef
 from ..core.rpc import Router, RpcContext, Server, Status, RpcError
-from .engine import Engine
+from .engine import ContinuousBatcher, Engine, ShedError
+from .ingest import PageIngest
 
 # -- wire types ----------------------------------------------------------------
 
@@ -67,12 +84,81 @@ ScoreResponse = T.Message("ScoreResponse", [
     T.Field("scores", T.Array(T.FLOAT32), tag=1),
 ])
 
+# Page-encoded inference: the payload is a core/pages.py page whose records
+# are fixed-layout structs, so the interesting bytes cross the wire exactly
+# once and are decoded on the device.
+InferRequest = T.Message("InferRequest", [
+    T.Field("page", T.Array(T.BYTE), tag=1),       # PromptRecord{seq} page
+    T.Field("max_new_tokens", T.UINT32, tag=2),
+    T.Field("stop_token", T.INT32, tag=3),
+])
+
+InferResponse = T.Message("InferResponse", [
+    T.Field("page", T.Array(T.BYTE), tag=1),       # GenRecord{new} page
+    T.Field("batch", T.UINT32, tag=2),
+    T.Field("new_tokens", T.UINT32, tag=3),
+])
+
+InferChunk = T.Message("InferChunk", [
+    T.Field("index", T.UINT32, tag=1),
+    T.Field("page", T.Array(T.BYTE), tag=2),       # GenRecord1 page
+])
+
 InferenceService = ServiceDef("Inference", [
     MethodDef("Tokenize", TokenizeRequest, TokenBatch),
     MethodDef("Generate", GenerateRequest, GenerateResponse),
     MethodDef("Stream", GenerateRequest, TokenChunk, server_stream=True),
     MethodDef("Score", TokenBatch, ScoreResponse),
+    MethodDef("Infer", InferRequest, InferResponse),
+    MethodDef("InferStream", InferRequest, InferChunk, server_stream=True),
+    MethodDef("ScorePage", InferResponse, ScoreResponse),
 ])
+
+
+# -- page record schemas -------------------------------------------------------
+
+def prompt_record_struct(seq_len: int) -> T.Struct:
+    """One inference prompt row: ``struct PromptRecord{N} { tokens: u32[N] }``."""
+    return T.Struct(f"PromptRecord{seq_len}", [
+        T.Field("tokens", T.FixedArray(T.UINT32, seq_len)),
+    ])
+
+
+def gen_record_struct(new_tokens: int) -> T.Struct:
+    """One generated row: ``struct GenRecord{N} { tokens: u32[N] }``."""
+    return T.Struct(f"GenRecord{new_tokens}", [
+        T.Field("tokens", T.FixedArray(T.UINT32, new_tokens)),
+    ])
+
+
+def encode_prompt_page(tokens: np.ndarray) -> bytes:
+    """[B, T] tokens -> one PromptRecord page (the client-side encoder)."""
+    tokens = np.atleast_2d(np.asarray(tokens))
+    s = prompt_record_struct(tokens.shape[1])
+    recs = np.zeros(tokens.shape[0], dtype=fastwire.static_dtype(s))
+    recs["tokens"] = tokens.astype("<u4")
+    return pages.write_page(s.name, recs)
+
+
+def encode_gen_page(tokens: np.ndarray) -> bytes:
+    """[B, N] generated tokens -> one GenRecord page."""
+    tokens = np.atleast_2d(np.asarray(tokens))
+    s = gen_record_struct(tokens.shape[1])
+    recs = np.zeros(tokens.shape[0], dtype=fastwire.static_dtype(s))
+    recs["tokens"] = tokens.astype("<u4")
+    return pages.write_page(s.name, recs)
+
+
+def decode_token_page(buf) -> np.ndarray:
+    """Page of {Prompt,Gen}Record -> [B, N] uint32 (zero-copy host view).
+
+    An empty buffer is the zero-generated-tokens response: [0, 0].
+    """
+    if len(buf) == 0:
+        return np.zeros((0, 0), dtype="<u4")
+    payload = pages.read_payload(buf)
+    return np.ascontiguousarray(payload).view("<u4").reshape(
+        payload.shape[0], payload.shape[1] // 4)
 
 
 def _tokens_2d(msg: dict) -> np.ndarray:
@@ -83,10 +169,175 @@ def _tokens_2d(msg: dict) -> np.ndarray:
 
 
 class InferenceImpl:
-    """Service implementation over an Engine."""
+    """Service implementation over an Engine.
 
-    def __init__(self, engine: Engine):
+    The page path owns a :class:`PageIngest` (device placement + kernel
+    decode behind a schema-hash plan cache) and a
+    :class:`ContinuousBatcher` (cross-request batch assembly).
+    """
+
+    # Distinct prompt widths a single service will compile decode plans
+    # for.  Plans and their jitted decoders are cached per width, and the
+    # width is client-controlled — without a bound, a client sweeping
+    # strides would force unbounded compilation (a compute/memory DoS).
+    MAX_PLAN_WIDTHS = 64
+
+    def __init__(self, engine: Engine, *,
+                 ingest: Optional[PageIngest] = None,
+                 batcher: Optional[ContinuousBatcher] = None):
         self.engine = engine
+        self.ingest = ingest or PageIngest()
+        self.batcher = batcher or ContinuousBatcher(engine)
+        self._plan_lock = threading.Lock()
+        self._known_seqs: Dict[int, bool] = {}
+
+    # -- page plumbing -------------------------------------------------------
+    def _ensure_plan(self, seq_len: int) -> None:
+        """Register Prompt/Gen record plans for this width exactly once."""
+        with self._plan_lock:
+            if seq_len in self._known_seqs:
+                return
+            if len(self._known_seqs) >= self.MAX_PLAN_WIDTHS:
+                raise RpcError(Status.RESOURCE_EXHAUSTED,
+                               "too many distinct prompt widths")
+            self.ingest.register(prompt_record_struct(seq_len))
+            self.ingest.register(gen_record_struct(seq_len))
+            self._known_seqs[seq_len] = True
+
+    def _admit_tokens(self, req: dict, ctx: RpcContext) -> np.ndarray:
+        """InferRequest page -> [B, T] int32 via the device decode path."""
+        ctx.check_deadline()  # shed before any placement work
+        raw = req.get("page")
+        if raw is None or len(raw) == 0:
+            raise RpcError(Status.INVALID_ARGUMENT, "missing page payload")
+        # pages.* speak the buffer protocol; no copy of the payload here
+        buf = raw if isinstance(raw, (bytes, bytearray, memoryview)) \
+            else np.ascontiguousarray(raw)
+        try:
+            header = pages.read_header(buf)
+            if header.record_stride % 4 or header.record_stride == 0:
+                raise pages.PageError(
+                    f"prompt stride {header.record_stride} is not a "
+                    f"positive multiple of 4 (u32 tokens)")
+            if header.record_count == 0:
+                raise pages.PageError("page holds zero records")
+            seq_len = header.record_stride // 4
+            if seq_len > self.engine.serve.cache_len:
+                raise pages.PageError(
+                    f"prompt length {seq_len} exceeds engine cache "
+                    f"{self.engine.serve.cache_len}")
+            self._ensure_plan(seq_len)
+            admitted = self.ingest.admit(buf, deadline=ctx.deadline)
+        except pages.PageError as e:
+            # Admission signals mid-ingest expiry as a PageError; surface it
+            # as the deadline status, not as a malformed request.
+            code = Status.DEADLINE_EXCEEDED if "deadline" in str(e) \
+                else Status.INVALID_ARGUMENT
+            raise RpcError(code, f"bad page: {e}") from e
+        return np.asarray(admitted.columns["tokens"])
+
+    def _await(self, fut, ctx: RpcContext) -> np.ndarray:
+        import concurrent.futures as _cf
+        timeout = None
+        if ctx.deadline is not None:
+            timeout = max(ctx.deadline.remaining(), 0.0) + 1.0
+        try:
+            return fut.result(timeout=timeout)
+        except ShedError as e:
+            code = Status.DEADLINE_EXCEEDED if "deadline" in str(e) \
+                else Status.RESOURCE_EXHAUSTED
+            raise RpcError(code, str(e)) from e
+        except _cf.TimeoutError:
+            raise RpcError(Status.DEADLINE_EXCEEDED,
+                           "deadline expired waiting for batch slot") from None
+
+    # -- page-encoded inference (the device-resident path) --------------------
+    def Infer(self, req: dict, ctx: RpcContext) -> dict:
+        ctx.check_deadline()
+        tokens = self._admit_tokens(req, ctx)
+        # absent field -> service default; explicit 0 -> prefill-only
+        maxn = int(req["max_new_tokens"]) if "max_new_tokens" in req else 16
+        stop = req.get("stop_token", -1)
+        fut = self.batcher.submit(
+            tokens, max_new_tokens=maxn,
+            stop_token=stop if stop >= 0 else None,
+            deadline=ctx.deadline)
+        out = self._await(fut, ctx)
+        # zero generated tokens (deadline hit right after prefill) is a
+        # success with an empty page, not an absent field — clients decode
+        # unconditionally
+        return {"batch": out.shape[0], "new_tokens": out.shape[1],
+                "page": encode_gen_page(out) if out.shape[1] else b""}
+
+    def _token_stream(self, tokens: np.ndarray, maxn: int,
+                      stop_token: Optional[int],
+                      ctx: RpcContext) -> Iterator:
+        """Yield (index, [B,1] tokens) AS the decode loop produces them.
+
+        Generation runs on a worker thread feeding a queue, so each frame
+        flushes the moment its decode step finishes — time-to-first-token
+        is one prefill + one decode step, not the whole generation.
+        """
+        q: _queue.Queue = _queue.Queue()
+        cancelled = threading.Event()
+
+        class _Cancelled(Exception):
+            pass
+
+        def on_token(i, tok):
+            if cancelled.is_set():  # client went away: stop decoding
+                raise _Cancelled()
+            q.put((i, tok))
+
+        def worker():
+            try:
+                self.engine.generate(tokens, max_new_tokens=maxn,
+                                     stop_token=stop_token,
+                                     deadline=ctx.deadline,
+                                     start_from=int(ctx.cursor),
+                                     on_token=on_token)
+                q.put(None)
+            except _Cancelled:
+                pass
+            except BaseException as e:  # noqa: BLE001 - relayed to the caller
+                q.put(e)
+
+        threading.Thread(target=worker, daemon=True,
+                         name="serve-stream-gen").start()
+        try:
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            cancelled.set()  # dropped consumer aborts the decode loop
+
+    def InferStream(self, req: dict, ctx: RpcContext) -> Iterator[dict]:
+        """Page-encoded streaming with cursor resumption (§7.5).
+
+        Streams bypass the batcher (each step must flush immediately); the
+        cursor counts delivered decode steps, so a reconnect regenerates
+        deterministically and skips what the client already holds.
+        """
+        tokens = self._admit_tokens(req, ctx)
+        maxn = int(req.get("max_new_tokens", 16))
+        stop = req.get("stop_token", -1)
+        for i, tok in self._token_stream(tokens, maxn,
+                                         stop if stop >= 0 else None, ctx):
+            ctx.set_cursor(i + 1)
+            yield {"index": i, "page": encode_gen_page(tok)}
+
+    def ScorePage(self, req: dict, ctx: RpcContext) -> dict:
+        """Score a token page (chains after Infer via batch pipelining)."""
+        ctx.check_deadline()
+        tokens = self._admit_tokens(req, ctx).astype(np.int32)
+        if tokens.shape[1] < 2:
+            raise RpcError(Status.INVALID_ARGUMENT,
+                           "scoring needs at least 2 tokens per row")
+        return {"scores": self.engine.score(tokens).astype(np.float32)}
 
     # tokenizer stub: bytes -> ids mod vocab (a real deployment plugs a
     # sentencepiece model here; the RPC layer is what we exercise)
@@ -118,16 +369,7 @@ class InferenceImpl:
         """
         tokens = _tokens_2d(req)
         maxn = int(req.get("max_new_tokens", 16))
-        chunks = []
-
-        def on_token(i, tok):
-            chunks.append((i, tok))
-
-        self.engine.generate(tokens, max_new_tokens=maxn,
-                             deadline=ctx.deadline,
-                             start_from=int(ctx.cursor),
-                             on_token=on_token)
-        for i, tok in chunks:
+        for i, tok in self._token_stream(tokens, maxn, None, ctx):
             ctx.set_cursor(i + 1)  # next frame carries the position marker
             yield {"index": i, "tokens": tok.reshape(-1).astype(np.uint32)}
 
@@ -136,7 +378,8 @@ class InferenceImpl:
         return {"scores": self.engine.score(tokens).astype(np.float32)}
 
 
-def build_server(engine: Engine, *, descriptor: bytes = b"") -> Server:
+def build_server(engine: Engine, *, descriptor: bytes = b"",
+                 impl: Optional[InferenceImpl] = None) -> Server:
     router = Router()
-    router.add_service(InferenceService, InferenceImpl(engine))
+    router.add_service(InferenceService, impl or InferenceImpl(engine))
     return Server(router, descriptor=descriptor)

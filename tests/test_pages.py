@@ -1,0 +1,114 @@
+"""core/pages.py error paths and durability features.
+
+Pages are the unit of wire->device transfer, so the failure modes matter as
+much as the happy path: a corrupt payload must be detected before it
+reaches a model, compression must round-trip bit-exactly, and the
+``first_record`` cursor must let a reader resume mid-stream by skipping
+whole pages.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pages
+from repro.core import types as T
+from repro.core.hashing import schema_hash
+from repro.data import pack_examples, synthetic_corpus, train_example_struct
+
+
+SEQ = 8
+
+
+def _page(n=16, first_record=0, seed=0, compress=False):
+    s = train_example_struct(SEQ)
+    toks = synthetic_corpus(SEQ, n, 997, seed=seed)
+    recs = pack_examples(SEQ, toks)
+    return s, toks, pages.write_page(s.name, recs, first_record=first_record,
+                                     compress=compress)
+
+
+# -- corruption ---------------------------------------------------------------
+
+def test_corrupt_payload_crc_raises():
+    s, _, buf = _page()
+    bad = bytearray(buf)
+    bad[pages.HEADER_SIZE + 3] ^= 0x5A
+    with pytest.raises(pages.PageError, match="CRC"):
+        pages.read_payload(bytes(bad))
+    # verify=False skips the check (trusted-storage fast path)
+    out = pages.read_payload(bytes(bad), verify=False)
+    assert out.shape[0] == 16
+
+
+def test_corrupt_header_crc_field_raises():
+    s, _, buf = _page()
+    bad = bytearray(buf)
+    bad[20] ^= 0xFF  # payload_crc32 field inside the header
+    with pytest.raises(pages.PageError, match="CRC"):
+        pages.read_payload(bytes(bad))
+
+
+def test_bad_magic_and_version():
+    _, _, buf = _page()
+    bad = bytearray(buf)
+    bad[0] ^= 1
+    with pytest.raises(pages.PageError, match="magic"):
+        pages.read_header(bytes(bad))
+    bad = bytearray(buf)
+    bad[4] = 99
+    with pytest.raises(pages.PageError, match="version"):
+        pages.read_header(bytes(bad))
+
+
+def test_truncated_header_and_payload():
+    _, _, buf = _page()
+    with pytest.raises(pages.PageError, match="truncated"):
+        pages.read_header(buf[:32])
+    with pytest.raises(pages.PageError, match="truncated"):
+        pages.read_payload(buf[:pages.HEADER_SIZE + 8])
+
+
+def test_schema_mismatch():
+    s, _, buf = _page()
+    assert pages.read_header(buf).schema_hash == schema_hash(s.name)
+    with pytest.raises(pages.PageError, match="schema"):
+        pages.read_payload(buf, expect_schema="SomethingElse")
+
+
+# -- compression --------------------------------------------------------------
+
+def test_compressed_roundtrip():
+    zstd = pytest.importorskip("zstandard")  # noqa: F841 - optional dep
+    s, toks, buf = _page(compress=True)
+    h = pages.read_header(buf)
+    assert h.compressed
+    recs = pages.decode_page(s, buf)
+    assert np.array_equal(recs["tokens"], toks)
+    # corruption inside the compressed payload still surfaces as PageError
+    bad = bytearray(buf)
+    bad[pages.HEADER_SIZE + 1] ^= 0xFF
+    with pytest.raises(Exception):
+        pages.decode_page(s, bytes(bad))
+
+
+# -- cursor resume ------------------------------------------------------------
+
+def test_seek_cursor_skips_whole_pages():
+    s, toks_a, page_a = _page(n=16, first_record=0, seed=1)
+    _, toks_b, page_b = _page(n=16, first_record=16, seed=2)
+    _, toks_c, page_c = _page(n=16, first_record=32, seed=3)
+    buf = page_a + page_b + page_c
+    offs = list(pages.iter_pages(buf))
+    assert len(offs) == 3
+
+    # cursor inside the second page: first page is skipped entirely
+    off = pages.seek_cursor(buf, 20)
+    assert off == offs[1]
+    recs = pages.decode_page(s, buf, off)
+    assert np.array_equal(recs["tokens"], toks_b)
+
+    # cursor on an exact page boundary starts at that page
+    assert pages.seek_cursor(buf, 32) == offs[2]
+    # cursor past the end: nothing to resume
+    assert pages.seek_cursor(buf, 48) is None
+    # cursor zero: start at the beginning
+    assert pages.seek_cursor(buf, 0) == offs[0]

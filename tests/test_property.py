@@ -12,7 +12,9 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fastwire, types as T, varint, wire
 from repro.core.rpc.batch import build_layers
