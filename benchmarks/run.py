@@ -2,9 +2,45 @@
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` runs a reduced set
 (CI); the full run reproduces every table in EXPERIMENTS.md.
+
+Unless ``--no-json`` is given, the same rows are also written to
+``BENCH_<git-sha>.json`` (``--json-dir`` picks the directory) so the repo
+accumulates a machine-readable perf trajectory: one file per commit, each
+row carrying the benchmark name, its median time, and units.
 """
 import argparse
+import json
+import os
+import subprocess
 import sys
+import time
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "nogit"
+    except Exception:  # noqa: BLE001 - benches must run outside a checkout
+        return "nogit"
+
+
+def write_json(rows, path: str, *, quick: bool) -> None:
+    doc = {
+        "git_sha": git_sha(),
+        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "quick": quick,
+        "benchmarks": [
+            {"name": name, "median": round(us, 3), "units": "us_per_call",
+             "derived": derived}
+            for name, us, derived in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
 
 
 def main() -> None:
@@ -13,7 +49,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated module suffixes "
                          "(decode,throughput,json,roundtrip,wiresize,"
-                         "varint_model,rpc,kernels,serve_ingest)")
+                         "varint_model,rpc,kernels,serve_ingest,"
+                         "paged_attention)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the BENCH_<sha>.json trajectory artifact")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<sha>.json (default: cwd)")
     args = ap.parse_args()
 
     import importlib
@@ -21,20 +62,22 @@ def main() -> None:
     # Modules import lazily and individually: an optional dependency missing
     # from one table (e.g. orjson for the JSON comparison) must not take
     # down the rest of the suite, especially in CI.
-    for key in ("decode",        # Table 4
-                "throughput",    # Table 5 / Fig 3
-                "json",          # Table 6
-                "roundtrip",     # Table 7
-                "wiresize",      # Table 8 / Fig 2
-                "varint_model",  # Eq 1 / Fig 1
-                "rpc",           # §7.3 / §7.6
-                "kernels",       # device decode layer
-                "serve_ingest"):  # wire->device serving path (§8)
+    for key in ("decode",          # Table 4
+                "throughput",      # Table 5 / Fig 3
+                "json",            # Table 6
+                "roundtrip",       # Table 7
+                "wiresize",        # Table 8 / Fig 2
+                "varint_model",    # Eq 1 / Fig 1
+                "rpc",             # §7.3 / §7.6
+                "kernels",         # device decode layer
+                "serve_ingest",    # wire->device serving path (§8)
+                "paged_attention"):  # paged KV decode vs dense cache
         try:
             modules[key] = importlib.import_module(f".bench_{key}", __package__)
         except ImportError as e:
             modules[key] = e
     only = set(args.only.split(",")) if args.only else None
+    all_rows = []
     print("name,us_per_call,derived")
     for key, mod in modules.items():
         if only is not None and key not in only:
@@ -54,6 +97,11 @@ def main() -> None:
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.3f},{derived}", flush=True)
+        all_rows.extend(rows)
+    if not args.no_json:
+        path = os.path.join(args.json_dir, f"BENCH_{git_sha()}.json")
+        write_json(all_rows, path, quick=args.quick)
+        print(f"wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import numpy as np
 
 def bench(fn: Callable[[], object], *, min_time_s: float = 0.05,
           repeats: int = 5, max_iters: int = 200_000) -> Tuple[float, float]:
-    """Returns (mean seconds/call, coefficient of variation)."""
+    """Returns (median seconds/call, coefficient of variation)."""
     fn()  # warmup / JIT / caches
     # calibrate
     iters = 1
@@ -27,9 +27,9 @@ def bench(fn: Callable[[], object], *, min_time_s: float = 0.05,
         for _ in range(iters):
             fn()
         samples.append((time.perf_counter() - t0) / iters)
-    mean = float(np.mean(samples))
-    cv = float(np.std(samples) / mean) if mean else 0.0
-    return mean, cv
+    med = float(np.median(samples))  # robust to one slow repeat (GC, page-in)
+    cv = float(np.std(samples) / med) if med else 0.0
+    return med, cv
 
 
 def fmt_time(seconds: float) -> str:

@@ -67,6 +67,48 @@ def read_uvarint(buf, pos: int) -> Tuple[int, int]:
             raise T.DecodeError("varint too long")
 
 
+def read_packed_uvarints(body) -> list:
+    """Vectorized decode of a packed varint run (numpy continuation scan).
+
+    Byte-exact with looping :func:`read_uvarint` over ``body``: same
+    values, same error cases.  Instead of a branch per byte, one pass over
+    the buffer classifies continuation bits, a ``reduceat`` ORs each
+    group's 7-bit payloads into place, and only the (protobuf-invalid)
+    >64-bit stragglers fall back to the scalar loop.  This keeps the
+    protobuf *baseline* honest in the paper comparison: the fixed-layout
+    side keeps getting faster, so the varint side gets the best
+    vectorization its format admits.
+    """
+    arr = np.frombuffer(bytes(body), dtype=np.uint8)
+    if arr.size == 0:
+        return []
+    cont = (arr & 0x80) != 0
+    if cont[-1]:
+        raise T.DecodeError("varint overruns buffer")
+    ends = np.flatnonzero(~cont)
+    starts = np.empty_like(ends)
+    starts[0] = 0
+    starts[1:] = ends[:-1] + 1
+    lengths = ends - starts + 1
+    if int(lengths.max()) > 10:
+        raise T.DecodeError("varint too long")
+    if int(lengths.max()) == 10:
+        # 10-byte varints whose top byte exceeds 1 overflow 64 bits; the
+        # scalar loop's Python ints keep the extra bits, so defer to it
+        # for byte-exactness on that (protobuf-invalid) corner
+        if (arr[ends[lengths == 10]] > 1).any():
+            raw = arr.tobytes()  # scalar loop needs Python ints, not uint8
+            out, pos = [], 0
+            while pos < len(raw):
+                v, pos = read_uvarint(raw, pos)
+                out.append(v)
+            return out
+    shift = (7 * (np.arange(arr.size) - np.repeat(starts, lengths))
+             ).astype(np.uint64)
+    vals = (arr & 0x7F).astype(np.uint64) << shift
+    return np.bitwise_or.reduceat(vals, starts).tolist()
+
+
 def uvarint_size(v: int) -> int:
     n = 1
     while v >= 0x80:
@@ -439,10 +481,10 @@ def _coerce_repeated(ft: T.Array, raws):
         out = []
         for body, wt in raws:
             if wt == WT_LEN:
-                pos = 0
-                while pos < len(body):
-                    v, pos = read_uvarint(body, pos)  # branch per byte
-                    out.append(_sign64(v) if signed else v)
+                # vectorized continuation-bit scan (byte-exact with the
+                # element-at-a-time loop it replaced)
+                vs = read_packed_uvarints(body)
+                out.extend(_sign64(v) if signed else v for v in vs)
             else:
                 out.append(_sign64(body) if signed else body)
         if isinstance(elem, T.Prim) and elem.name == "bool":

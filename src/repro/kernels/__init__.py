@@ -3,6 +3,9 @@
   bebop_decode    — on-device Bebop page deserialization (the paper's
                     technique; §4.4 adapted to TPU VMEM tiling)
   flash_attention — blockwise online-softmax attention (GQA/causal/window)
+  paged_attention — decode attention over a block-pooled KV cache: the
+                    block table is a scalar-prefetch operand, so K/V
+                    gathers are fixed-stride DMAs (no pointer chasing)
   rwkv6_scan      — RWKV6 WKV recurrence with data-dependent decay
   rglru_scan      — RG-LRU gated diagonal recurrence (RecurrentGemma)
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import bebop_decode as _bd
 from . import flash_attention as _fa
+from . import paged_attention as _pa
 from . import ref
 from . import rglru_scan as _rg
 from . import rwkv6_scan as _rw
@@ -77,6 +78,26 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                    interpret=not _on_tpu())
     return ref.attention(q, k, v, causal=causal, window=window, scale=scale,
                          q_offset=q_offset)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, qpos: jax.Array, *,
+                    scale: Optional[float] = None,
+                    impl: Optional[str] = None) -> jax.Array:
+    """Attention of new tokens against a block-pooled KV cache.
+
+    q: [B, Hq, T, D]; pools: [N, Hkv, bs, D]; block_tables: [B, M] int32;
+    qpos: [B, T] absolute positions of the query tokens.  The Pallas
+    kernel serves the decode shape (T == 1); chunked prefill (T > 1) uses
+    the reference gather, which XLA fuses the same way.
+    """
+    if _pick(impl) == "pallas" and q.shape[2] == 1:
+        out = _pa.paged_attention(q[:, :, 0, :], k_pool, v_pool,
+                                  block_tables, qpos[:, 0] + 1, scale=scale,
+                                  interpret=not _on_tpu())
+        return out[:, :, None, :]
+    return ref.paged_attention(q, k_pool, v_pool, block_tables, qpos,
+                               scale=scale)
 
 
 # -- recurrences ---------------------------------------------------------------

@@ -1,0 +1,137 @@
+"""Paged-attention decode kernel: block-table KV gather with fixed strides.
+
+One new token per sequence attends over its whole history, which lives in
+a pool of fixed-size KV blocks (serving/kv_cache.py).  The block table is
+a scalar-prefetch operand (``PrefetchScalarGridSpec``), so the index maps
+translate *logical* block j of row b into the *physical* pool block
+``table[b, j]`` before the kernel body runs — each grid step's K/V tile is
+one fixed-stride DMA
+
+    addr = pool_base + table[b, j] * BLOCK_STRIDE
+
+exactly the Bebop-page addressing discipline applied to generation state.
+Inside a block there are no data-dependent branches: validity is position
+arithmetic (``j*bs + lane < ctx``) folded into the mask, and the online-
+softmax update is the same branchless schedule as flash_attention.py.
+Blocks entirely past a row's context are skipped at block granularity with
+``pl.when`` — no FLOPs, no VMEM traffic beyond the prefetched table.
+
+Grid: (batch, kv_head, logical_block) with the block axis innermost and
+sequential, carrying running max / denominator / accumulator in VMEM.
+GQA comes for free: queries arrive grouped per KV head ([B, Hkv, g, D]),
+so all g grouped heads share each gathered KV tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tbl_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, block_size: int,
+                  num_blocks: int):
+    bi = pl.program_id(0)
+    ji = pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[bi]                       # valid tokens for this row
+    base = ji * block_size                  # logical position of the block
+
+    @pl.when(base < ctx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [g, d]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bs, d]
+        v = v_ref[0, 0].astype(jnp.float32)                # [bs, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [g,bs]
+        # branchless tail mask: arithmetic on positions, not control flow
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < ctx, s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]                         # [g, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        correction = jnp.exp(m_prev - m_new)
+        l_new = l_ref[...][:, :1] * correction \
+            + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * correction + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ji == num_blocks - 1)
+    def _emit():
+        l = l_ref[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)     # ctx == 0 rows emit zeros
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, ctx_lens: jax.Array, *,
+                    scale: Optional[float] = None,
+                    interpret: bool = True) -> jax.Array:
+    """Single-token decode attention through a block table.
+
+    q: [B, Hq, D] (one new token per row); k_pool / v_pool:
+    [N, Hkv, bs, D]; block_tables: [B, M] int32; ctx_lens: [B] int32
+    (tokens 0..ctx-1 of each row participate).  Returns [B, Hq, D].
+    """
+    b, hq, d = q.shape
+    _, hkv, bs, _ = k_pool.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    m = block_tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, block_size=bs,
+                               num_blocks=m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, hi, ji, tbl, ctx: (bi, hi, 0, 0)),
+            # the fixed-stride gather: physical block id from the
+            # prefetched table, everything else static
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda bi, hi, ji, tbl, ctx: (tbl[bi, ji], hi,
+                                                       0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda bi, hi, ji, tbl, ctx: (tbl[bi, ji], hi,
+                                                       0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, ji, tbl, ctx: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),   # running max
+            pltpu.VMEM((g, 128), jnp.float32),   # denominator
+            pltpu.VMEM((g, d), jnp.float32),     # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        grid_spec=grid_spec,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(b, hq, d)

@@ -136,6 +136,42 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, hq, tq, d).astype(q.dtype)
 
 
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, qpos: jax.Array, *,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Reference paged attention over a block-pooled KV cache.
+
+    q: [B, Hq, T, D] new-token queries (decode: T == 1; chunked prefill:
+    T == chunk).  k_pool / v_pool: [N, Hkv, bs, D] fixed-size block pools.
+    block_tables: [B, M] int32 physical block ids (logical block j of row
+    b lives at ``block_tables[b, j]``).  qpos: [B, T] absolute positions
+    of the query tokens; key position s participates for query (b, t) iff
+    ``s <= qpos[b, t]`` (causal over the request's own history).
+
+    Semantically identical to :func:`attention` against the contiguous
+    cache the table describes; the Pallas kernel gathers blocks by table
+    lookup instead of materializing the [B, M*bs, ...] view.
+    """
+    b, hq, t, d = q.shape
+    _, hkv, bs, _ = k_pool.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    m = block_tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    # gather: [B, M, Hkv, bs, D] -> [B, Hkv, M*bs, D] (logical order)
+    k = jnp.moveaxis(k_pool[block_tables], 2, 1).reshape(b, hkv, m * bs, d)
+    v = jnp.moveaxis(v_pool[block_tables], 2, 1).reshape(b, hkv, m * bs, d)
+    qr = q.reshape(b, hkv, g, t, d)
+    logits = jnp.einsum("bhgtd,bhsd->bhgts", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(m * bs)
+    mask = kpos[None, None, :] <= qpos[:, :, None]          # [B, T, S]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, t, d).astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # RWKV6 (Finch) WKV recurrence with data-dependent decay
 # --------------------------------------------------------------------------

@@ -17,6 +17,17 @@ def main(argv=None) -> int:
     ap.add_argument("--port", type=int, default=0)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per paged-KV block (rounded up to a "
+                         "64B-aligned stride)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefilled per chunked step")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool size in blocks (0 = auto from max-batch)")
+    ap.add_argument("--dense-cache", action="store_true",
+                    help="disable the paged KV cache / mixed-length "
+                         "scheduler and serve with the dense batcher")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--once", action="store_true",
                     help="start, print the port, serve one probe, exit "
@@ -30,10 +41,18 @@ def main(argv=None) -> int:
     if not args.full:
         cfg = reduced_config(cfg)
     engine = Engine(cfg, ServeConfig(cache_len=args.cache_len,
-                                     max_new_tokens=args.max_new_tokens))
+                                     max_new_tokens=args.max_new_tokens,
+                                     max_batch=args.max_batch,
+                                     paged=not args.dense_cache,
+                                     block_size=args.block_size,
+                                     prefill_chunk=args.prefill_chunk,
+                                     num_blocks=args.num_blocks))
     server = build_server(engine)
     host, port, lsock = server.listen_tcp(args.host, args.port)
-    print(f"bebop-rpc serving {cfg.name} on {host}:{port}", flush=True)
+    mode = "paged" if not args.dense_cache and engine.supports_paged \
+        else "dense"
+    print(f"bebop-rpc serving {cfg.name} on {host}:{port} "
+          f"({mode} KV cache)", flush=True)
 
     if args.once:
         import numpy as np

@@ -314,6 +314,45 @@ def _decode_attend(q, k, v, cfg: ModelConfig, pos):
     return o.reshape(b, cfg.num_heads, 1, cfg.head_dim)
 
 
+def attention_paged(p: Params, x: jax.Array, cfg: ModelConfig,
+                    k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, positions: jax.Array):
+    """Attention for chunked prefill / decode against a paged KV pool.
+
+    x: [B, C, D] new tokens (decode: C == 1; prefill: C == chunk).
+    k_pool / v_pool: [N, Hkv, bs, hd] fixed-size block pools (one layer's
+    slice).  block_tables: [B, M] int32.  positions: [B, C] absolute
+    positions of the new tokens.
+
+    The new K/V are scattered into the pool at fixed-stride addresses
+    (block = table[pos // bs], slot = pos % bs), then the queries attend
+    over the request's table — so a batch of *mixed-length* rows is one
+    call, no shape compatibility required.  Returns
+    (out [B, C, D], (k_pool, v_pool)).
+    """
+    b, c, _ = x.shape
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    q, k_new = _pos_embed(q, k_new, cfg, positions)
+    bs = k_pool.shape[2]
+    m = block_tables.shape[1]
+    # clamp: padded prefill positions past the table write into whatever
+    # the padding entries point at (the null block) and are never read
+    pos = jnp.clip(positions, 0, m * bs - 1)
+    blk = jnp.take_along_axis(block_tables, pos // bs, axis=1)   # [B, C]
+    slot = pos % bs
+    kk = jnp.moveaxis(k_new, 1, 2).reshape(b * c, cfg.num_kv_heads,
+                                           cfg.head_dim)
+    vv = jnp.moveaxis(v_new, 1, 2).reshape(b * c, cfg.num_kv_heads,
+                                           cfg.head_dim)
+    bidx, sidx = blk.reshape(-1), slot.reshape(-1)
+    k_pool = k_pool.at[bidx, :, sidx, :].set(kk.astype(k_pool.dtype))
+    v_pool = v_pool.at[bidx, :, sidx, :].set(vv.astype(v_pool.dtype))
+    o = ops.paged_attention(q, k_pool, v_pool, block_tables, pos,
+                            impl=cfg.attention_impl)
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, c, cfg.q_dim)
+    return o @ p["wo"], (k_pool, v_pool)
+
+
 # --------------------------------------------------------------------------
 # Cross-attention (encoder-decoder)
 # --------------------------------------------------------------------------

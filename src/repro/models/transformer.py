@@ -95,6 +95,22 @@ def decoder_layer_prefill(p: Params, x, cfg: ModelConfig, positions,
     return x, kv
 
 
+def decoder_layer_paged(p: Params, x, cfg: ModelConfig, k_pool, v_pool,
+                        block_tables, positions):
+    """One decoder layer against a paged KV pool (prefill chunk or decode)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    att, pools = L.attention_paged(p["attn"], h, cfg, k_pool, v_pool,
+                                   block_tables, positions)
+    x = x + att
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, _ = M.moe_ffn(p["moe"], h, cfg)
+        x = x + y
+    else:
+        x = x + L.mlp(p["mlp"], h, cfg)
+    return x, pools
+
+
 def decoder_layer_decode(p: Params, x, cfg: ModelConfig, cache, pos):
     if cfg.rwkv:
         x, state = W.rwkv_block(p, x, cfg, state=cache)
@@ -213,6 +229,54 @@ class DecoderLM:
         x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = L.unembed(params, x[:, -1:], cfg)[:, 0]
         return logits, cache
+
+    # -- paged serving (block-pooled KV cache; serving/kv_cache.py) ----------
+    @property
+    def supports_paged(self) -> bool:
+        """Paged KV is wired for the standard GQA decoder stack: token
+        inputs, global attention, standard RoPE.  Recurrent / windowed /
+        M-RoPE variants keep the dense path."""
+        cfg = self.cfg
+        return (cfg.input_kind == "tokens" and not cfg.rwkv
+                and cfg.attention_kind == "global" and not cfg.mrope)
+
+    def init_paged_pool(self, num_blocks: int, block_size: int):
+        cfg = self.cfg
+        shape = (cfg.num_layers, num_blocks, cfg.num_kv_heads, block_size,
+                 cfg.head_dim)
+        # distinct buffers: the pool is donated through the jitted step and
+        # a shared k/v array would be donated twice
+        return {"k": jnp.zeros(shape, L.dtype_of(cfg)),
+                "v": jnp.zeros(shape, L.dtype_of(cfg))}
+
+    def paged_step(self, params: Params, tokens: jax.Array, pool,
+                   block_tables: jax.Array, positions: jax.Array,
+                   last_idx: jax.Array):
+        """Advance C tokens per row against the paged pool.
+
+        tokens: [B, C] (decode: C == 1; chunked prefill: C == chunk);
+        pool: {"k","v"} [L, N, Hkv, bs, hd]; block_tables: [B, M] int32;
+        positions: [B, C] absolute positions; last_idx: [B] index of each
+        row's last *valid* token within the chunk (prefill chunks are
+        right-padded).  Returns (logits [B, V] at last_idx, new pool).
+        """
+        cfg = self.cfg
+        x = L.embed(params, tokens, cfg)
+
+        def body(x, xs):
+            layer_p, k_l, v_l = xs
+            layer_p = _gather_layer(layer_p, cfg)
+            x, (k_l, v_l) = decoder_layer_paged(layer_p, x, cfg, k_l, v_l,
+                                                block_tables, positions)
+            return x, (k_l, v_l)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], pool["k"], pool["v"]))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        x_last = jnp.take_along_axis(
+            x, last_idx[:, None, None].astype(jnp.int32), axis=1)  # [B,1,D]
+        logits = L.unembed(params, x_last, cfg)[:, 0]
+        return logits, {"k": k_new, "v": v_new}
 
     def decode_step(self, params: Params, tokens: jax.Array, cache, pos):
         """tokens: [B, 1]; pos: scalar absolute position."""

@@ -9,17 +9,24 @@ Three layers, one subsystem:
     ``schema_hash``, so steady-state admission never walks a type tree —
     the paper's "GPU-side deserialization for direct device memory
     placement" (§8) as a serving component.
-  * :mod:`.engine` — jitted prefill/decode steps plus
-    :class:`ContinuousBatcher`: an admission queue with per-request
-    deadlines and batch assembly across in-flight requests.
+  * :mod:`.kv_cache` — the block-pooled paged KV cache: fixed-stride
+    64B-aligned KV blocks, a free-list allocator with ownership
+    invariants, and per-request block tables (Bebop-page addressing
+    applied to generation state).
+  * :mod:`.engine` — jitted prefill/decode steps plus two schedulers:
+    :class:`ContinuousBatcher` (dense cache, shape-compatible grouping)
+    and :class:`PagedBatcher` (paged cache: chunked prefill, mixed-length
+    batching, mid-generation admission).
   * :mod:`.service` — the Bebop-RPC ``Inference`` service.  ``Infer`` /
     ``InferStream`` / ``ScorePage`` speak fixed-layout pages in both
     directions (the host never parses a token) and compose under batch
     pipelining, so prefill->decode->score chains resolve server-side in
     one round trip.
 """
-from .engine import (ContinuousBatcher, Engine, ServeConfig,  # noqa: F401
-                     ShedError)
+from .engine import (ContinuousBatcher, Engine, PagedBatcher,  # noqa: F401
+                     ServeConfig, ShedError)
 from .ingest import DecodePlan, IngestResult, PageIngest, PlanCache  # noqa: F401
+from .kv_cache import (BlockAllocator, CacheOOM, PagedKVCache,  # noqa: F401
+                       aligned_block_size)
 from .service import (InferenceService, InferenceImpl,  # noqa: F401
                       build_server, decode_token_page, encode_prompt_page)

@@ -1,16 +1,26 @@
-"""Serving engine: jitted prefill/decode steps + continuous batching.
+"""Serving engine: jitted prefill/decode steps + request scheduling.
 
 `prefill_step` and `decode_step` here are exactly what the multi-pod
 dry-run lowers for the inference shapes (prefill_32k / decode_32k /
 long_500k): one new token against a KV cache (or recurrent state) of
 ``seq_len``.
 
-:class:`ContinuousBatcher` is the scheduler in front of the engine: an
-admission queue of in-flight requests, per-request deadlines
-(core/rpc/deadline.py), and batch assembly — concurrent RPC requests with
-compatible shapes are concatenated along the batch axis and run as ONE
-prefill+decode sequence, then the rows are split back per request.  Expired
-requests are shed at admission and at assembly, before any device work.
+Two schedulers sit in front of the engine:
+
+  * :class:`ContinuousBatcher` — the dense-cache scheduler: concurrent
+    requests with *compatible shapes* (same prompt length, same stop
+    token) are concatenated along the batch axis and run as ONE
+    prefill+decode sequence.  Kept as the fallback for model families
+    without paged-KV support and as the benchmark baseline.
+  * :class:`PagedBatcher` — the block-pooled scheduler
+    (serving/kv_cache.py + the paged-attention kernel): every request's
+    KV lives in fixed-stride blocks addressed through a block table, so
+    one decode step advances a batch of *mixed-length* rows, prompts are
+    prefilled in fixed-size chunks, and new requests are admitted into
+    free batch slots mid-generation instead of waiting for a
+    shape-compatible group.
+
+Both shed expired requests at admission and before device work.
 """
 from __future__ import annotations
 
@@ -27,6 +37,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import get_model
+from .kv_cache import PagedKVCache
 
 
 @dataclasses.dataclass
@@ -35,6 +46,13 @@ class ServeConfig:
     cache_len: int = 1024
     max_new_tokens: int = 64
     temperature: float = 0.0    # 0 = greedy
+    # paged KV cache (serving/kv_cache.py); paged=True routes supported
+    # model families through PagedBatcher, others fall back to the dense
+    # ContinuousBatcher automatically
+    paged: bool = True
+    block_size: int = 16        # tokens per KV block (64B-alignment rounds up)
+    prefill_chunk: int = 32     # prompt tokens prefilled per chunked step
+    num_blocks: int = 0         # 0 = auto: max_batch * blocks_per_seq + null
 
 
 class Engine:
@@ -52,7 +70,19 @@ class Engine:
             lambda p, b: self.model.prefill(p, b, serve_cfg.cache_len))
         self._decode = jax.jit(self.model.decode_step,
                                donate_argnums=(2,))
+        self._paged_step = None  # compiled lazily by PagedBatcher
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
+
+    @property
+    def supports_paged(self) -> bool:
+        return bool(getattr(self.model, "supports_paged", False))
+
+    def paged_step_fn(self):
+        """The jitted paged step (pool donated so updates are in place)."""
+        if self._paged_step is None:
+            self._paged_step = jax.jit(self.model.paged_step,
+                                       donate_argnums=(2,))
+        return self._paged_step
 
     # -- generation --------------------------------------------------------------
     def generate(self, tokens: np.ndarray, *, max_new_tokens: Optional[int]
@@ -336,4 +366,346 @@ class ContinuousBatcher:
 
     def mean_batch_rows(self) -> float:
         b = self.stats["batches"]
+        return self.stats["batched_rows"] / b if b else 0.0
+
+
+# --------------------------------------------------------------------------
+# Paged scheduling (block-pooled KV cache, mixed-length batching)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _PagedReq:
+    """One in-flight request: rows share a prompt and advance in lockstep."""
+
+    tokens: np.ndarray                  # [B, T] prompt
+    max_new_tokens: int
+    stop_token: Optional[int]
+    deadline: Optional[Any]
+    future: _cf.Future
+    rid: int
+    enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
+    # runtime state (set at admission)
+    tables: Optional[np.ndarray] = None     # [B, M] int32 block tables
+    slots: List[int] = dataclasses.field(default_factory=list)
+    next_tok: Optional[np.ndarray] = None   # [B] pending (unemitted) tokens
+    out: List[np.ndarray] = dataclasses.field(default_factory=list)
+    pos_next: int = 0                       # absolute position of next write
+
+    @property
+    def rows(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def seq_len(self) -> int:
+        return self.tokens.shape[1]
+
+    def expired(self) -> bool:
+        return self.deadline is not None and self.deadline.expired()
+
+
+class PagedBatcher:
+    """Mixed-length continuous batching over the paged KV cache.
+
+    Every admitted request owns fixed-stride blocks in one shared pool
+    (serving/kv_cache.py), so batch assembly is just "which rows are
+    live": one jitted :meth:`~repro.models.transformer.DecoderLM.paged_step`
+    advances all active rows regardless of their prompt lengths or
+    positions, prompts are prefilled in ``prefill_chunk``-token chunks,
+    and new requests slot in *between decode steps* of in-flight ones —
+    no shape-compatible grouping, no whole-group re-prefill.
+
+    Shedding happens at three points: on submit (queue full / already
+    expired), at admission (expired in queue), and before each decode
+    step (expired mid-generation requests are evicted, their blocks
+    returned to the pool, and their prefix delivered — same contract as
+    the dense path).  Requests the pool can never hold (more rows than
+    ``max_batch`` or prompts longer than the table) fall back to the
+    dense engine inline.
+    """
+
+    def __init__(self, engine: Engine, *, max_batch: Optional[int] = None,
+                 max_queue: int = 64):
+        if not engine.supports_paged:
+            raise ValueError(
+                f"{engine.cfg.name}: model family has no paged-KV support; "
+                f"use ContinuousBatcher")
+        self.engine = engine
+        cfg, sc = engine.cfg, engine.serve
+        self.max_batch = max_batch or sc.max_batch
+        self.max_queue = max_queue
+        self.prefill_chunk = max(1, sc.prefill_chunk)
+        self.cache = PagedKVCache(
+            num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, cache_len=sc.cache_len,
+            block_size=sc.block_size, num_blocks=sc.num_blocks,
+            max_concurrent=self.max_batch, dtype=cfg.dtype)
+        self.cache.pool = engine.model.init_paged_pool(
+            self.cache.layout.num_blocks, self.cache.block_size)
+        self._step = engine.paged_step_fn()
+        self._queue: collections.deque = collections.deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._active: List[_PagedReq] = []
+        self._slots: List[Optional[Tuple[_PagedReq, int]]] = \
+            [None] * self.max_batch
+        self._next_rid = 0
+        self.stats = {"requests": 0, "rows": 0, "shed": 0, "decode_steps": 0,
+                      "batched_rows": 0, "prefill_chunks": 0,
+                      "admitted_in_flight": 0, "dense_fallbacks": 0}
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="serve-paged-batcher")
+        self._worker.start()
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, tokens: np.ndarray, *,
+               max_new_tokens: Optional[int] = None,
+               stop_token: Optional[int] = None,
+               deadline=None) -> _cf.Future:
+        """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32."""
+        tokens = np.atleast_2d(np.asarray(tokens, dtype=np.int32))
+        maxn = self.engine.serve.max_new_tokens if max_new_tokens is None \
+            else max_new_tokens  # explicit 0 = prefill-only
+        with self._cond:
+            self._next_rid += 1
+            p = _PagedReq(tokens, maxn, stop_token, deadline, _cf.Future(),
+                          self._next_rid)
+            if self._closed:
+                self.stats["shed"] += 1
+                p.future.set_exception(ShedError("batcher closed"))
+                return p.future
+            if p.expired():
+                self.stats["shed"] += 1
+                p.future.set_exception(
+                    ShedError("deadline expired before admission"))
+                return p.future
+            if len(self._queue) >= self.max_queue:
+                self.stats["shed"] += 1
+                p.future.set_exception(ShedError("admission queue full"))
+                return p.future
+            self._queue.append(p)
+            self.stats["requests"] += 1
+            self.stats["rows"] += p.rows
+            self._cond.notify()
+        return p.future
+
+    def generate(self, tokens: np.ndarray, **kw) -> np.ndarray:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(tokens, **kw).result()
+
+    # -- worker -------------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._active \
+                        and not self._closed:
+                    self._cond.wait()
+                if self._closed and not self._queue and not self._active:
+                    return
+            try:
+                self._admit()
+                if self._active:
+                    self._decode_step()
+            except Exception:  # noqa: BLE001 - the worker must survive
+                continue
+
+    def _take_admittable(self) -> Tuple[Optional[_PagedReq],
+                                        Optional[_PagedReq]]:
+        """(request to prefill, request to run dense) — at most one each.
+
+        FIFO with skip-ahead: a queued request that fits the free slots
+        and blocks right now is taken even if an earlier, larger one is
+        still waiting (the earlier one keeps its queue position).
+        """
+        with self._cond:
+            free_slots = self.max_batch - sum(
+                1 for s in self._slots if s is not None)
+            for p in list(self._queue):
+                if p.expired():
+                    self._queue.remove(p)
+                    self.stats["shed"] += 1
+                    p.future.set_exception(
+                        ShedError("deadline expired in queue"))
+                    continue
+                if p.rows > self.max_batch \
+                        or p.seq_len + max(p.max_new_tokens, 0) \
+                        > self.cache.layout.tokens:
+                    # doesn't fit the paged budget (too many rows, or the
+                    # prompt + generation would overrun the block table):
+                    # the dense path serves it with its own semantics
+                    self._queue.remove(p)
+                    return None, p
+                need = p.rows * self.cache.blocks_needed(
+                    p.seq_len + p.max_new_tokens)
+                if need > self.cache.allocator.capacity:
+                    # can NEVER fit this pool: shed now, don't wedge the
+                    # queue behind an unsatisfiable request
+                    self._queue.remove(p)
+                    self.stats["shed"] += 1
+                    p.future.set_exception(ShedError(
+                        f"request needs {need} KV blocks, pool capacity "
+                        f"is {self.cache.allocator.capacity}"))
+                    continue
+                if p.rows <= free_slots \
+                        and need <= self.cache.num_free_blocks:
+                    self._queue.remove(p)
+                    return p, None
+            return None, None
+
+    def _admit(self) -> None:
+        while True:
+            req, dense = self._take_admittable()
+            if dense is not None:
+                self._run_dense(dense)
+                continue
+            if req is None:
+                return
+            if self._active:
+                self.stats["admitted_in_flight"] += 1
+            try:
+                self._prefill(req)
+            except Exception as e:  # noqa: BLE001 - fail THIS request only
+                self._retire(req, exc=e)
+
+    def _run_dense(self, p: _PagedReq) -> None:
+        """Oversized request: dense engine inline (rare escape hatch)."""
+        self.stats["dense_fallbacks"] += 1
+        try:
+            out = self.engine.generate(p.tokens,
+                                       max_new_tokens=p.max_new_tokens,
+                                       stop_token=p.stop_token,
+                                       deadline=p.deadline)
+        except Exception as e:  # noqa: BLE001
+            if not p.future.done():
+                p.future.set_exception(e)
+            return
+        if not p.future.done():
+            p.future.set_result(out)
+
+    # -- chunked prefill ----------------------------------------------------
+    def _prefill(self, req: _PagedReq) -> None:
+        rows, t = req.rows, req.seq_len
+        # admission guaranteed t + max_new <= layout.tokens, so every
+        # position this request will ever write is covered by its table
+        req.tables = np.stack([
+            self.cache.allocate((req.rid, r), t + req.max_new_tokens)
+            for r in range(rows)])
+        c = self.prefill_chunk
+        padded = -(-t // c) * c
+        toks = np.zeros((rows, padded), np.int32)
+        toks[:, :t] = req.tokens
+        tables_j = jnp.asarray(req.tables)
+        logits = None
+        for start in range(0, padded, c):
+            if start and req.expired():
+                # mid-prefill expiry: deliver the empty prefix (the dense
+                # path's contract: prefill done, zero tokens generated)
+                self._retire(req)
+                return
+            pos = np.broadcast_to(
+                start + np.arange(c, dtype=np.int32), (rows, c))
+            last = np.full((rows,), min(t - 1 - start, c - 1), np.int32)
+            logits, self.cache.pool = self._step(
+                self.engine.params, jnp.asarray(toks[:, start:start + c]),
+                self.cache.pool, tables_j, jnp.asarray(pos),
+                jnp.asarray(last))
+            self.stats["prefill_chunks"] += 1
+        req.pos_next = t
+        req.next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+        if req.max_new_tokens <= 0 or req.expired():
+            self._retire(req)
+            return
+        for i in range(self.max_batch):
+            if len(req.slots) == rows:
+                break
+            if self._slots[i] is None:
+                self._slots[i] = (req, len(req.slots))
+                req.slots.append(i)
+        self._active.append(req)
+
+    # -- decode -------------------------------------------------------------
+    def _decode_step(self) -> None:
+        m = self.cache.blocks_per_seq
+        for req in list(self._active):   # evict expired before device work
+            if req.expired():
+                self._retire(req)
+        if not self._active:
+            return
+        b = self.max_batch
+        toks = np.zeros((b, 1), np.int32)
+        tables = np.zeros((b, m), np.int32)   # null block for idle rows
+        pos = np.zeros((b,), np.int32)
+        n_rows = 0
+        for i, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            req, r = slot
+            toks[i, 0] = req.next_tok[r]
+            tables[i] = req.tables[r]
+            pos[i] = req.pos_next
+            n_rows += 1
+        try:
+            logits, self.cache.pool = self._step(
+                self.engine.params, jnp.asarray(toks), self.cache.pool,
+                jnp.asarray(tables), jnp.asarray(pos)[:, None],
+                jnp.zeros((b,), jnp.int32))
+        except Exception as e:  # noqa: BLE001 - fail every member, survive
+            for req in list(self._active):
+                self._retire(req, exc=e)
+            raise
+        self.stats["decode_steps"] += 1
+        self.stats["batched_rows"] += n_rows
+        logits = np.asarray(logits)
+        for req in list(self._active):
+            req.out.append(req.next_tok.copy())   # emit the fed token
+            req.pos_next += 1
+            new = logits[req.slots].argmax(-1).astype(np.int32)
+            if len(req.out) >= req.max_new_tokens:
+                self._retire(req)
+            elif req.stop_token is not None \
+                    and bool((new == req.stop_token).all()):
+                self._retire(req)                 # stop token not emitted
+            else:
+                req.next_tok = new
+
+    # -- retirement ---------------------------------------------------------
+    def _retire(self, req: _PagedReq, *,
+                exc: Optional[BaseException] = None) -> None:
+        """Free ALL of the request's blocks and resolve its future."""
+        for r in range(req.rows):
+            self.cache.release((req.rid, r))
+        for s in req.slots:
+            self._slots[s] = None
+        req.slots = []
+        if req in self._active:
+            self._active.remove(req)
+        if exc is not None:
+            if not req.future.done():
+                req.future.set_exception(exc)
+            return
+        res = np.stack(req.out, axis=1) if req.out \
+            else np.zeros((req.rows, 0), np.int32)
+        if req.stop_token is not None and res.size:
+            # same per-request trim as the dense batcher: responses are
+            # independent of what they were batched with
+            hits = (res == req.stop_token).all(axis=0)
+            if hits.any():
+                res = res[:, :int(np.argmax(hits))]
+        if not req.future.done():
+            req.future.set_result(np.ascontiguousarray(res))
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._worker.join(timeout=5.0)
+        with self._cond:
+            while self._queue:
+                p = self._queue.popleft()
+                if not p.future.done():
+                    p.future.set_exception(ShedError("batcher closed"))
+
+    def mean_batch_rows(self) -> float:
+        b = self.stats["decode_steps"]
         return self.stats["batched_rows"] / b if b else 0.0

@@ -1,0 +1,233 @@
+"""Block-pooled paged KV cache: fixed-stride blocks + free-list allocator.
+
+The paper's core claim is that fixed-size, branchless layouts turn decoding
+into pure memory reads.  The serving KV cache applies that to generation
+state: instead of one dense ``[B, H, cache_len, hd]`` tensor per batch
+shape (which forces the scheduler to only merge shape-identical requests),
+K/V live in a single device-resident pool of fixed-size blocks
+
+    pool: [num_layers, num_blocks, num_kv_heads, block_size, head_dim]
+
+and every request owns an ordered *block table* — a row of physical block
+ids.  Addressing is pure arithmetic, exactly like a Bebop page record:
+
+    token at logical position p of request r lives in
+        block  = table[r][p // block_size]
+        slot   = p %  block_size
+        byte   = pool_base + block * BLOCK_STRIDE + slot * ROW_STRIDE
+
+No pointer chasing, no per-request reshapes, no data-dependent control
+flow on the read path — the paged-attention kernel receives the table as a
+scalar-prefetch operand and turns it into fixed-stride DMA descriptors.
+
+Like a Bebop page, a block's stride is forced to a 64-byte multiple
+(:func:`aligned_block_size`), so every block starts on a cache-line/DMA
+boundary regardless of head_dim/dtype.
+
+Block 0 is reserved as the *null block*: padding entries in block tables
+point at it, and masked/inactive batch rows write their garbage there.  It
+is never handed to a request, so stale writes can never corrupt live data.
+
+The :class:`BlockAllocator` is a plain free-list (LIFO for locality) with
+ownership tracking: double-assignment is a hard invariant (checked on
+every alloc), and releasing an owner returns *all* of its blocks — the
+property the deadline-shedding path relies on (a shed request must never
+leak pool capacity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List, Optional
+
+import numpy as np
+
+_ALIGN = 64  # bytes; Bebop-page-style block alignment
+
+
+class CacheOOM(RuntimeError):
+    """The block pool cannot satisfy an allocation right now."""
+
+
+def aligned_block_size(block_size: int, head_dim: int, dtype) -> int:
+    """Round ``block_size`` up until a block row is 64B-aligned.
+
+    One block holds ``block_size * head_dim`` elements per KV head; the
+    block stride in bytes must be a multiple of 64 so fixed-stride
+    addressing always lands on an aligned boundary (the same rule
+    core/device.py applies to page columns).
+    """
+    itemsize = np.dtype(dtype).itemsize
+    bs = max(int(block_size), 1)
+    while (bs * head_dim * itemsize) % _ALIGN:
+        bs += 1
+    return bs
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size blocks.
+
+    Block 0 is reserved (the null block) and never allocated.  Blocks are
+    handed out LIFO so recently-freed (likely still-resident) blocks are
+    reused first.  Every block tracks its owner; handing out a block that
+    already has one raises — that invariant is what the property tests
+    hammer on.
+    """
+
+    def __init__(self, num_blocks: int, *, reserved: int = 1):
+        if num_blocks <= reserved:
+            raise ValueError(f"need > {reserved} blocks, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.reserved = reserved
+        self._free: List[int] = list(range(num_blocks - 1, reserved - 1, -1))
+        self._owner: Dict[int, Hashable] = {}
+        self._owned: Dict[Hashable, List[int]] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - self.reserved
+
+    def blocks_of(self, owner: Hashable) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    def alloc(self, n: int, owner: Hashable) -> List[int]:
+        """Take ``n`` blocks for ``owner``; all-or-nothing."""
+        if n < 0:
+            raise ValueError(f"negative block count {n}")
+        if n > len(self._free):
+            raise CacheOOM(
+                f"{n} blocks requested, {len(self._free)} free "
+                f"(capacity {self.capacity})")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            if b in self._owner:  # the invariant; corrupt free list if hit
+                raise AssertionError(f"block {b} double-assigned "
+                                     f"({self._owner[b]!r} -> {owner!r})")
+            self._owner[b] = owner
+        self._owned.setdefault(owner, []).extend(out)
+        return out
+
+    def free(self, owner: Hashable) -> int:
+        """Return ALL blocks of ``owner`` to the free list."""
+        blocks = self._owned.pop(owner, [])
+        for b in blocks:
+            del self._owner[b]
+        # LIFO reuse: most recently used first
+        self._free.extend(reversed(blocks))
+        return len(blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of a paged pool (derived, never recomputed per call)."""
+
+    num_layers: int
+    num_blocks: int
+    num_kv_heads: int
+    block_size: int
+    head_dim: int
+    dtype: str
+    blocks_per_seq: int   # block-table width M (= ceil(cache_len / bs))
+
+    @property
+    def block_bytes(self) -> int:
+        """Fixed per-layer block stride in bytes (the Bebop-page analogue)."""
+        return (self.num_kv_heads * self.block_size * self.head_dim
+                * np.dtype(self.dtype).itemsize)
+
+    @property
+    def tokens(self) -> int:
+        return self.blocks_per_seq * self.block_size
+
+
+class PagedKVCache:
+    """Device-resident block pool + per-request block tables.
+
+    ``pool`` is a ``{"k", "v"}`` dict of ``[L, N, Hkv, bs, hd]`` arrays the
+    engine threads through its jitted steps (donated, so updates are in
+    place).  This class owns the *bookkeeping*: which physical blocks back
+    which request, and the padded ``[M]`` int32 table rows the kernels
+    consume.
+    """
+
+    def __init__(self, *, num_layers: int, num_kv_heads: int, head_dim: int,
+                 cache_len: int, block_size: int = 16, num_blocks: int = 0,
+                 max_concurrent: int = 8, dtype: str = "float32"):
+        bs = aligned_block_size(block_size, head_dim, dtype)
+        m = -(-cache_len // bs)
+        if num_blocks <= 0:
+            num_blocks = max_concurrent * m + 1  # +1 for the null block
+        self.layout = PagedLayout(num_layers, num_blocks, num_kv_heads, bs,
+                                  head_dim, dtype, m)
+        self.allocator = BlockAllocator(num_blocks)
+        self._tables: Dict[Hashable, List[int]] = {}
+        self._pool = None   # device buffers materialize lazily (or are
+        # injected by the engine, whose model owns the pool layout)
+        assert self.layout.block_bytes % _ALIGN == 0
+
+    @property
+    def pool(self):
+        """{"k", "v"} device pools, [L, N, Hkv, bs, hd].
+
+        Lazy: the engine injects the model-built pool before first use, so
+        the default buffers — the largest allocations in the serving path —
+        are never built twice.  K and V are distinct buffers because the
+        jitted steps donate the pool.
+        """
+        if self._pool is None:
+            import jax.numpy as jnp
+            lo = self.layout
+            shape = (lo.num_layers, lo.num_blocks, lo.num_kv_heads,
+                     lo.block_size, lo.head_dim)
+            self._pool = {"k": jnp.zeros(shape, jnp.dtype(lo.dtype)),
+                          "v": jnp.zeros(shape, jnp.dtype(lo.dtype))}
+        return self._pool
+
+    @pool.setter
+    def pool(self, value) -> None:
+        self._pool = value
+
+    @property
+    def block_size(self) -> int:
+        return self.layout.block_size
+
+    @property
+    def blocks_per_seq(self) -> int:
+        return self.layout.blocks_per_seq
+
+    @property
+    def num_free_blocks(self) -> int:
+        return self.allocator.num_free
+
+    def blocks_needed(self, num_tokens: int) -> int:
+        return min(-(-num_tokens // self.block_size), self.blocks_per_seq)
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        return self.blocks_needed(num_tokens) <= self.allocator.num_free
+
+    def allocate(self, owner: Hashable, num_tokens: int) -> np.ndarray:
+        """Reserve blocks covering ``num_tokens`` logical positions.
+
+        Returns the padded ``[M]`` int32 block-table row (padding entries
+        point at the null block).  All-or-nothing: raises :class:`CacheOOM`
+        without side effects if the pool is short.
+        """
+        if owner in self._tables:
+            raise ValueError(f"owner {owner!r} already holds blocks")
+        blocks = self.allocator.alloc(self.blocks_needed(num_tokens), owner)
+        self._tables[owner] = blocks
+        return self.table_row(owner)
+
+    def table_row(self, owner: Hashable) -> np.ndarray:
+        row = np.zeros(self.blocks_per_seq, np.int32)
+        blocks = self._tables[owner]
+        row[:len(blocks)] = blocks
+        return row
+
+    def release(self, owner: Hashable) -> int:
+        """Return every block of ``owner`` (finish OR shed path)."""
+        self._tables.pop(owner, None)
+        return self.allocator.free(owner)

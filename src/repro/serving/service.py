@@ -44,7 +44,7 @@ from ..core import fastwire, pages
 from ..core import types as T
 from ..core.schema import MethodDef, ServiceDef
 from ..core.rpc import Router, RpcContext, Server, Status, RpcError
-from .engine import ContinuousBatcher, Engine, ShedError
+from .engine import ContinuousBatcher, Engine, PagedBatcher, ShedError
 from .ingest import PageIngest
 
 # -- wire types ----------------------------------------------------------------
@@ -184,10 +184,16 @@ class InferenceImpl:
 
     def __init__(self, engine: Engine, *,
                  ingest: Optional[PageIngest] = None,
-                 batcher: Optional[ContinuousBatcher] = None):
+                 batcher=None):
         self.engine = engine
         self.ingest = ingest or PageIngest()
-        self.batcher = batcher or ContinuousBatcher(engine)
+        if batcher is None:
+            # mixed-length paged scheduling when the model family supports
+            # it (serve config can force the dense path with paged=False)
+            batcher = PagedBatcher(engine) \
+                if engine.serve.paged and engine.supports_paged \
+                else ContinuousBatcher(engine)
+        self.batcher = batcher
         self._plan_lock = threading.Lock()
         self._known_seqs: Dict[int, bool] = {}
 

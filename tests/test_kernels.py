@@ -7,6 +7,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.bebop_decode import decode_column, decode_columns
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
@@ -157,6 +158,98 @@ def test_flash_attention_decode_q1(rng):
                        causal=True, q_offset=255)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5,
                                rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# paged attention (block-table KV gather)
+# --------------------------------------------------------------------------
+
+def _paged_setup(rng, b, hq, hkv, d, bs, m, n):
+    q = rng.standard_normal((b, hq, d)).astype(np.float32)
+    kp = rng.standard_normal((n, hkv, bs, d)).astype(np.float32)
+    vp = rng.standard_normal((n, hkv, bs, d)).astype(np.float32)
+    # distinct physical blocks per row, shuffled: the table is the ONLY
+    # thing mapping logical order onto the pool
+    tables = np.stack([rng.permutation(np.arange(1, n))[:m]
+                       for _ in range(b)]).astype(np.int32)
+    return q, kp, vp, tables
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,bs,m,n", [
+    (4, 4, 2, 16, 8, 6, 32),
+    (2, 8, 1, 64, 16, 4, 16),     # MQA
+    (3, 4, 4, 32, 16, 8, 64),
+    (1, 2, 2, 128, 32, 2, 8),
+])
+def test_paged_attention_vs_ref(rng, b, hq, hkv, d, bs, m, n):
+    q, kp, vp, tables = _paged_setup(rng, b, hq, hkv, d, bs, m, n)
+    ctx = rng.integers(1, m * bs + 1, b).astype(np.int32)
+    out = paged_attention(jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+                          jnp.asarray(tables), jnp.asarray(ctx),
+                          interpret=True)
+    expect = ref.paged_attention(jnp.asarray(q)[:, :, None, :],
+                                 jnp.asarray(kp), jnp.asarray(vp),
+                                 jnp.asarray(tables),
+                                 jnp.asarray(ctx - 1)[:, None])
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(expect)[:, :, 0, :],
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_paged_attention_matches_contiguous(rng):
+    """Gathering through the block table == dense attention over the
+    contiguous cache the table describes (per row, per context length)."""
+    b, hq, hkv, d, bs, m, n = 4, 4, 2, 32, 8, 4, 32
+    q, kp, vp, tables = _paged_setup(rng, b, hq, hkv, d, bs, m, n)
+    ctx = np.array([1, 9, 17, 32], np.int32)
+    out = np.asarray(paged_attention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+        jnp.asarray(tables), jnp.asarray(ctx), interpret=True))
+    k = np.moveaxis(kp[tables], 2, 1).reshape(b, hkv, m * bs, d)
+    v = np.moveaxis(vp[tables], 2, 1).reshape(b, hkv, m * bs, d)
+    for i in range(b):
+        dense = ref.attention(
+            jnp.asarray(q[i:i + 1, :, None, :]),
+            jnp.asarray(k[i:i + 1, :, :ctx[i]]),
+            jnp.asarray(v[i:i + 1, :, :ctx[i]]),
+            causal=True, q_offset=int(ctx[i]) - 1)
+        np.testing.assert_allclose(out[i], np.asarray(dense)[0, :, 0],
+                                   atol=3e-5, rtol=1e-4)
+
+
+def test_paged_attention_ignores_unlisted_blocks(rng):
+    """Pool contents outside a row's table must never leak into its
+    output: scribbling over every unlisted block changes nothing."""
+    b, hq, hkv, d, bs, m, n = 2, 4, 2, 16, 8, 4, 32
+    q, kp, vp, tables = _paged_setup(rng, b, hq, hkv, d, bs, m, n)
+    ctx = np.array([13, 29], np.int32)
+    args = (jnp.asarray(tables), jnp.asarray(ctx))
+    out1 = np.asarray(paged_attention(jnp.asarray(q), jnp.asarray(kp),
+                                      jnp.asarray(vp), *args,
+                                      interpret=True))
+    listed = set(tables.reshape(-1).tolist())
+    scrib_k, scrib_v = kp.copy(), vp.copy()
+    for blk in range(n):
+        if blk not in listed:
+            scrib_k[blk] = 1e3
+            scrib_v[blk] = -1e3
+    out2 = np.asarray(paged_attention(jnp.asarray(q), jnp.asarray(scrib_k),
+                                      jnp.asarray(scrib_v), *args,
+                                      interpret=True))
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_paged_ref_prefill_chunk_shape(rng):
+    """The reference path also serves chunked prefill (T > 1)."""
+    b, hq, hkv, d, bs, m, n, t = 2, 4, 2, 16, 8, 4, 16, 8
+    q = rng.standard_normal((b, hq, t, d)).astype(np.float32)
+    _, kp, vp, tables = _paged_setup(rng, b, hq, hkv, d, bs, m, n)
+    qpos = np.broadcast_to(np.arange(t, dtype=np.int32), (b, t))
+    out = ref.paged_attention(jnp.asarray(q), jnp.asarray(kp),
+                              jnp.asarray(vp), jnp.asarray(tables),
+                              jnp.asarray(qpos))
+    assert out.shape == (b, hq, t, d)
+    assert np.isfinite(np.asarray(out)).all()
 
 
 def test_flash_attention_bf16(rng):

@@ -1,0 +1,120 @@
+"""Paged KV cache: allocator invariants (property-based) + layout rules."""
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import (BlockAllocator, CacheOOM, PagedKVCache,
+                                    aligned_block_size)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # optional dependency, like tests/test_property.py
+    HAS_HYPOTHESIS = False
+
+
+# -- deterministic unit coverage ----------------------------------------------
+
+def test_alloc_free_roundtrip():
+    a = BlockAllocator(9)
+    assert a.capacity == 8 and a.num_free == 8
+    b1 = a.alloc(3, "r1")
+    b2 = a.alloc(5, "r2")
+    assert 0 not in b1 + b2          # null block never handed out
+    assert len(set(b1) | set(b2)) == 8
+    assert a.num_free == 0
+    with pytest.raises(CacheOOM):
+        a.alloc(1, "r3")
+    assert a.free("r1") == 3
+    assert a.num_free == 3
+    b3 = a.alloc(3, "r3")
+    assert set(b3) == set(b1)        # LIFO reuse
+    assert a.free("unknown") == 0    # releasing a non-owner is a no-op
+
+
+def test_aligned_block_size_rounds_up():
+    # f32 head_dim 16: any block size is 64B-aligned already
+    assert aligned_block_size(16, 16, "float32") == 16
+    # bf16 head_dim 16 = 32B rows: odd block sizes round up
+    assert aligned_block_size(3, 16, "bfloat16") == 4
+    # f32 head_dim 20 = 80B rows: need lcm with 64
+    bs = aligned_block_size(1, 20, "float32")
+    assert (bs * 20 * 4) % 64 == 0
+
+
+def test_paged_cache_tables_and_release():
+    c = PagedKVCache(num_layers=2, num_kv_heads=2, head_dim=16,
+                     cache_len=64, block_size=16, max_concurrent=2)
+    assert c.blocks_per_seq == 4
+    assert c.layout.block_bytes % 64 == 0
+    t1 = c.allocate("a", 40)         # 3 blocks
+    assert t1.shape == (4,) and (t1[:3] > 0).all() and t1[3] == 0
+    with pytest.raises(ValueError):
+        c.allocate("a", 8)           # double allocation for one owner
+    t2 = c.allocate("b", 64)
+    assert not set(t1[:3]) & set(t2)
+    assert c.release("a") == 3
+    assert c.can_allocate(64)
+    k = c.pool["k"]
+    assert k.shape == (2, c.layout.num_blocks, 2, 16, 16)
+
+
+def test_oom_is_all_or_nothing():
+    c = PagedKVCache(num_layers=1, num_kv_heads=1, head_dim=16,
+                     cache_len=64, block_size=16, num_blocks=4)
+    c.allocate("a", 32)              # 2 of 3 usable blocks
+    free_before = c.num_free_blocks
+    with pytest.raises(CacheOOM):
+        c.allocate("b", 64)          # needs 4
+    assert c.num_free_blocks == free_before   # nothing leaked
+    c.allocate("b", 16)              # smaller request still fits
+
+
+# -- property test: alloc/free/evict never double-assigns ---------------------
+
+if HAS_HYPOTHESIS:
+    _ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("alloc"), st.integers(0, 5),
+                      st.integers(0, 7)),     # (op, nblocks, owner)
+            st.tuples(st.just("free"), st.integers(0, 7),
+                      st.integers(0, 7)),     # (op, owner, _)
+        ),
+        max_size=60)
+
+    @settings(max_examples=200, deadline=None)
+    @given(_ops)
+    def test_allocator_never_double_assigns(ops):
+        """Random alloc/free/evict interleavings keep every block owned by
+        at most one request, conserve capacity exactly, and a shed owner
+        gets ALL of its blocks back into circulation."""
+        a = BlockAllocator(12)
+        model = {}                       # owner -> set(blocks), the oracle
+        for op, x, y in ops:
+            if op == "alloc":
+                held = sum(len(v) for v in model.values())
+                owner = f"r{y}"
+                try:
+                    got = a.alloc(x, owner)
+                except CacheOOM:
+                    assert x > a.capacity - held
+                    continue
+                # no overlap with anything outstanding, no null block
+                flat = set().union(*model.values()) if model else set()
+                assert not set(got) & flat
+                assert 0 not in got
+                assert len(set(got)) == x
+                model.setdefault(owner, set()).update(got)
+            else:
+                owner = f"r{x}"
+                expect = len(model.pop(owner, set()))
+                assert a.free(owner) == expect   # shed returns ALL blocks
+            held = sum(len(v) for v in model.values())
+            assert a.num_free == a.capacity - held   # conservation
+        # draining every owner restores full capacity
+        for owner in list(model):
+            a.free(owner)
+        assert a.num_free == a.capacity
+else:  # pragma: no cover - CI installs hypothesis
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_allocator_never_double_assigns():
+        pass

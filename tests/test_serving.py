@@ -6,7 +6,8 @@ import uuid
 from repro.configs import get_config, reduced_config
 from repro.core import wire
 from repro.core.rpc import Channel, Deadline, RpcError, Status, connected_pair
-from repro.serving import Engine, ServeConfig, build_server
+from repro.serving import (Engine, PagedBatcher, ServeConfig, ShedError,
+                           build_server)
 from repro.serving.service import (GenerateRequest, GenerateResponse,
                                    InferenceService, ScoreResponse,
                                    TokenBatch, TokenChunk, TokenizeRequest)
@@ -128,6 +129,113 @@ def test_long_generation_as_future(setup):
     # retried dispatch with same key: same handle
     h2 = ch.dispatch_future(gid, req, idempotency_key=key)
     assert h2["id"] == h["id"]
+
+
+# -- paged scheduler: mixed-length batching --------------------------------
+
+@pytest.fixture(scope="module")
+def paged(setup):
+    cfg, engine, _ = setup
+    batcher = PagedBatcher(engine, max_batch=8)
+    yield cfg, engine, batcher
+    batcher.close()
+
+
+def test_paged_mixed_lengths_token_identical(paged):
+    """A heterogeneous batch must produce exactly what each request gets
+    when it runs alone — the acceptance invariant for the paged cache."""
+    cfg, engine, batcher = paged
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab_size, (1, t)).astype(np.int32)
+               for t in (5, 8, 11, 16, 3, 9, 24, 7)]
+    futs = [batcher.submit(p, max_new_tokens=6) for p in prompts]
+    outs = [f.result(timeout=180) for f in futs]
+    assert all(o.shape == (1, 6) for o in outs)
+    # decode steps really were shared across mixed lengths
+    assert batcher.mean_batch_rows() > 1.0
+    for p, o in zip(prompts, outs):
+        solo = batcher.generate(p, max_new_tokens=6)
+        assert np.array_equal(o, solo)
+
+
+def test_paged_matches_dense_engine(paged):
+    """Paged and dense caches hold the same K/V; greedy tokens agree."""
+    cfg, engine, batcher = paged
+    rng = np.random.default_rng(7)
+    for t in (4, 13, 21):
+        p = rng.integers(0, cfg.vocab_size, (1, t)).astype(np.int32)
+        assert np.array_equal(batcher.generate(p, max_new_tokens=5),
+                              engine.generate(p, max_new_tokens=5))
+
+
+def test_paged_stop_token_invariance_heterogeneous(paged):
+    """Stop-token semantics are per-request even in a mixed-length batch:
+    being batched with strangers never changes where a response ends."""
+    cfg, engine, batcher = paged
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, (1, t)).astype(np.int32)
+               for t in (6, 9, 14, 5)]
+    # solo references first (each alone in the batcher)
+    solos = [batcher.generate(p, max_new_tokens=8, stop_token=int(s))
+             for p, s in zip(prompts, (1, 2, 3, 4))]
+    futs = [batcher.submit(p, max_new_tokens=8, stop_token=int(s))
+            for p, s in zip(prompts, (1, 2, 3, 4))]
+    for f, solo in zip(futs, solos):
+        assert np.array_equal(f.result(timeout=180), solo)
+
+
+def test_paged_multirow_request(paged):
+    """[B, T] prompts occupy B slots and stay row-consistent."""
+    cfg, engine, batcher = paged
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, cfg.vocab_size, (2, 10)).astype(np.int32)
+    out = batcher.generate(p, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    assert np.array_equal(out, engine.generate(p, max_new_tokens=4))
+
+
+def test_paged_prefill_only_and_deadline_shed(paged):
+    cfg, engine, batcher = paged
+    rng = np.random.default_rng(13)
+    p = rng.integers(0, cfg.vocab_size, (1, 9)).astype(np.int32)
+    assert batcher.generate(p, max_new_tokens=0).shape == (1, 0)
+    fut = batcher.submit(p, max_new_tokens=4, deadline=Deadline.after(-1))
+    with pytest.raises(ShedError):
+        fut.result(timeout=30)
+
+
+def test_paged_budget_overflow_falls_back_dense(paged):
+    """A request whose prompt + generation overruns the block table must
+    not clamp-corrupt the cache — it takes the dense path and matches the
+    dense engine exactly."""
+    cfg, engine, batcher = paged
+    rng = np.random.default_rng(23)
+    # cache_len is 64: 60 + 8 > 64 can never fit the paged budget
+    p = rng.integers(0, cfg.vocab_size, (1, 60)).astype(np.int32)
+    before = batcher.stats["dense_fallbacks"]
+    out = batcher.generate(p, max_new_tokens=8)
+    assert batcher.stats["dense_fallbacks"] == before + 1
+    assert np.array_equal(out, engine.generate(p, max_new_tokens=8))
+    # pool untouched: everything still free afterwards
+    assert batcher.cache.num_free_blocks == batcher.cache.allocator.capacity
+
+
+def test_paged_blocks_are_returned(paged):
+    """After a workload drains, every block is back in the pool —
+    including those of shed requests."""
+    cfg, engine, batcher = paged
+    rng = np.random.default_rng(17)
+    futs = [batcher.submit(
+        rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32),
+        max_new_tokens=3) for _ in range(6)]
+    futs.append(batcher.submit(
+        rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32),
+        max_new_tokens=3, deadline=Deadline.after(-1)))
+    for f in futs[:-1]:
+        f.result(timeout=180)
+    with pytest.raises(ShedError):
+        futs[-1].result(timeout=30)
+    assert batcher.cache.num_free_blocks == batcher.cache.allocator.capacity
 
 
 def test_score_monotonic_sanity(setup):

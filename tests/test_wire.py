@@ -174,3 +174,41 @@ def test_message_tag_range():
         T.Message("M", [T.Field("a", T.INT32, tag=256)])
     with pytest.raises(T.SchemaError):
         T.Message("M", [T.Field("a", T.INT32, tag=0)])
+
+
+# -- vectorized packed-varint baseline (core/varint.py) ------------------------
+
+def test_packed_uvarint_vectorized_byte_exact():
+    """read_packed_uvarints == looping read_uvarint, including the >64-bit
+    fallback corner and both error cases."""
+    from repro.core import varint
+
+    rng = np.random.default_rng(0)
+    vals = [int(v) for v in rng.integers(0, 2**63, 64, dtype=np.int64)]
+    vals += [0, 1, 127, 128, 2**32, (-1) & 0xFFFFFFFFFFFFFFFF]
+    vals += [2**70 - 1]          # >64-bit: exercises the scalar fallback
+    buf = bytearray()
+    for v in vals:
+        varint.write_uvarint(buf, v)
+    slow, pos = [], 0
+    while pos < len(buf):
+        v, pos = varint.read_uvarint(bytes(buf), pos)
+        slow.append(v)
+    assert varint.read_packed_uvarints(bytes(buf)) == slow
+    assert slow[-1] == 2**70 - 1  # Python-int exactness survives fallback
+    with pytest.raises(T.DecodeError):
+        varint.read_packed_uvarints(b"\x80")            # overruns buffer
+    with pytest.raises(T.DecodeError):
+        varint.read_packed_uvarints(b"\x80" * 11 + b"\x01")  # too long
+    assert varint.read_packed_uvarints(b"") == []
+
+
+def test_packed_varint_array_field_decodes():
+    """The packed repeated-scalar path (the vectorized loop's only caller)
+    stays byte-exact through the full codec."""
+    from repro.core import varint
+
+    s = T.Struct("P", [T.Field("xs", T.Array(T.INT64))])
+    xs = [0, -1, 2**62, -2**62, 5, -5]
+    enc = varint.encode(s, {"xs": xs})
+    assert varint.decode(s, enc)["xs"] == xs
