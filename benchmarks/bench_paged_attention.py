@@ -1,6 +1,6 @@
 """Paged KV cache vs dense cache under heterogeneous decode traffic.
 
-Two measurements, both answering "what did fixed-stride block addressing
+Three measurements, all answering "what did fixed-stride block addressing
 buy the serving engine?":
 
   * ``decode_step.b4`` — advance 4 *mixed-length* requests by one token.
@@ -16,11 +16,21 @@ buy the serving engine?":
     :class:`PagedBatcher` (one mixed-length batch, requests admitted
     mid-generation).  Outputs are asserted token-identical before timing —
     the speedup is scheduling + layout, never different math.
+  * ``mixed_admission`` — p50/p99 inter-token latency of IN-FLIGHT decode
+    requests while a long prompt is admitted, fused prefill/decode steps
+    vs the blocking scheduler (``fused_prefill=False``).  Blocking runs
+    the newcomer's whole chunked prefill before active rows take their
+    next decode step, so every in-flight request stalls for O(prompt)
+    steps; the fused scheduler interleaves prefill chunks into the same
+    ``paged_step`` the decode rows ride, so the stall is O(1 step).
+    Outputs are asserted token-identical across schedulers before timing.
 
 CPU numbers (the CI gate) run the reference paged-attention gather; the
-Pallas kernel is the same schedule on TPU.
+Pallas kernels are the same schedule on TPU.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -31,6 +41,13 @@ from .timing import bench
 
 MAXN = 8
 LENGTHS = (6, 10, 14, 18, 22, 26, 30, 34)  # 8 distinct prompt lengths
+
+# mixed_admission workload geometry
+ADM_DECODE_REQS = 4       # in-flight decode requests being measured
+ADM_DECODE_T = 8          # their prompt length
+ADM_DECODE_MAXN = 48      # enough tokens to span the admission window
+ADM_LONG_T = 160          # the admitted long prompt (20 chunks of 8)
+ADM_CHUNK = 8
 
 
 def _decode_step_bench(engine: Engine):
@@ -128,10 +145,78 @@ def _engine_bench(engine: Engine):
     return rows
 
 
+def _admission_workload(cfg, *, fused: bool):
+    """Run the long-prompt-admission workload; returns (tokens, stalls).
+
+    ``stalls`` is, per in-flight decode request, the WORST inter-token gap
+    overlapping the admission window (long-prompt submit -> long-prompt
+    completion) — exactly the stall a streaming client observes while
+    someone else's prompt is ingested.  The workload runs twice per
+    scheduler (first pass warms every jit shape) and only the second pass
+    is measured.
+    """
+    engine = Engine(cfg, ServeConfig(
+        cache_len=ADM_LONG_T + ADM_CHUNK * 2, max_new_tokens=ADM_DECODE_MAXN,
+        max_batch=ADM_DECODE_REQS + 1, prefill_chunk=ADM_CHUNK,
+        fused_prefill=fused))
+    rng = np.random.default_rng(5)
+    dec_prompts = [rng.integers(0, cfg.vocab_size, (1, ADM_DECODE_T))
+                   .astype(np.int32) for _ in range(ADM_DECODE_REQS)]
+    long_prompt = rng.integers(0, cfg.vocab_size, (1, ADM_LONG_T)) \
+        .astype(np.int32)
+    for _ in range(2):   # first pass = jit warmup, second = measurement
+        batcher = PagedBatcher(engine, max_batch=ADM_DECODE_REQS + 1)
+        stamps = [[] for _ in range(ADM_DECODE_REQS)]
+        futs = [batcher.submit(
+            p, max_new_tokens=ADM_DECODE_MAXN,
+            on_token=lambda idx, tok, i=i: stamps[i].append(time.monotonic()))
+            for i, p in enumerate(dec_prompts)]
+        # let every decode request emit a few tokens before the admission
+        t0 = time.monotonic()
+        while min(len(s) for s in stamps) < 4:
+            if time.monotonic() - t0 > 300:
+                raise TimeoutError("decode requests never started emitting")
+            time.sleep(0.001)
+        t_admit = time.monotonic()
+        f_long = batcher.submit(long_prompt, max_new_tokens=2)
+        long_out = f_long.result(timeout=600)
+        t_done = time.monotonic()
+        outs = [f.result(timeout=600) for f in futs]
+        batcher.close()
+    stalls = []
+    for ts in stamps:
+        window = [b - a for a, b in zip(ts, ts[1:])
+                  if b > t_admit and a < t_done]
+        if window:
+            stalls.append(max(window))
+    return outs + [long_out], stalls
+
+
+def _mixed_admission_bench(cfg):
+    """Inter-token latency of in-flight decodes during a long admission."""
+    ref_out, stalls_blocking = _admission_workload(cfg, fused=False)
+    got_out, stalls_fused = _admission_workload(cfg, fused=True)
+    for r, g in zip(ref_out, got_out):
+        assert np.array_equal(r, g), "fused != blocking outputs"
+    assert stalls_blocking and stalls_fused, "no admission-straddling gaps"
+    p50_b, p99_b = np.percentile(stalls_blocking, [50, 99])
+    p50_f, p99_f = np.percentile(stalls_fused, [50, 99])
+    return [
+        ("paged_attention.mixed_admission.blocking", p50_b * 1e6,
+         f"p99={p99_b * 1e6:.0f}us in-flight decode inter-token latency "
+         f"at the moment a {ADM_LONG_T}-token prompt is admitted "
+         f"(blocking scheduler, n={len(stalls_blocking)} requests)"),
+        ("paged_attention.mixed_admission.fused", p50_f * 1e6,
+         f"p99={p99_f * 1e6:.0f}us ratio={p50_f / p50_b:.3f}x vs blocking "
+         f"(fused steps, n={len(stalls_fused)} requests)"),
+    ]
+
+
 def run(quick: bool = False):
     cfg = reduced_config(get_config("qwen2-1.5b"))
     engine = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=MAXN,
                                      max_batch=16, prefill_chunk=16))
     rows = _decode_step_bench(engine)
     rows += _engine_bench(engine)
+    rows += _mixed_admission_bench(cfg)
     return rows

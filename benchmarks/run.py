@@ -7,6 +7,14 @@ Unless ``--no-json`` is given, the same rows are also written to
 ``BENCH_<git-sha>.json`` (``--json-dir`` picks the directory) so the repo
 accumulates a machine-readable perf trajectory: one file per commit, each
 row carrying the benchmark name, its median time, and units.
+
+The trajectory is also *consumed*: unless ``--no-compare`` is given, the
+most recent committed ``BENCH_*.json`` (by ``created_utc``, in
+``--baseline-dir``, excluding the file this run just wrote) becomes the
+baseline, per-benchmark deltas are reported, and any benchmark slower
+than ``--regress-threshold`` (default 1.5x) times its baseline median
+fails the run with exit code 2 — the perf gate CI was uploading artifacts
+for but never enforcing.
 """
 import argparse
 import json
@@ -14,6 +22,10 @@ import os
 import subprocess
 import sys
 import time
+
+# medians below this are dispatch-overhead noise on a shared runner; a
+# 1.5x swing there says nothing about a kernel or scheduler regression
+COMPARE_FLOOR_US = 1.0
 
 
 def git_sha() -> str:
@@ -43,6 +55,80 @@ def write_json(rows, path: str, *, quick: bool) -> None:
         f.write("\n")
 
 
+def _committed_bench_files(baseline_dir: str):
+    """BENCH_*.json files git actually tracks in ``baseline_dir``.
+
+    Only *committed* baselines gate regressions — comparing against
+    whatever JSON the previous (possibly already-regressed) local run left
+    behind would let the threshold ratchet instead of holding a fixed
+    reference.  Outside a git checkout, fall back to every file on disk.
+    """
+    import glob
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "--", "BENCH_*.json"],
+            capture_output=True, text=True, timeout=10, cwd=baseline_dir)
+        if out.returncode == 0:
+            return [os.path.join(baseline_dir, p)
+                    for p in out.stdout.split() if p]
+    except Exception:  # noqa: BLE001 - benches must run outside a checkout
+        pass
+    return glob.glob(os.path.join(baseline_dir, "BENCH_*.json"))
+
+
+def load_baseline(baseline_dir: str, exclude_path: str, *, quick: bool):
+    """Most recent committed BENCH_*.json comparable to this run.
+
+    Returns (path, doc) or (None, None).  ``exclude_path`` is the file the
+    current run wrote (never its own baseline); docs from the other
+    ``quick`` mode measure different workloads and are skipped.
+    """
+    cands = []
+    for p in _committed_bench_files(baseline_dir):
+        if os.path.abspath(p) == os.path.abspath(exclude_path):
+            continue
+        try:
+            with open(p) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            continue
+        if doc.get("quick") != quick:
+            continue
+        cands.append((doc.get("created_utc", ""), p, doc))
+    if not cands:
+        return None, None
+    _, path, doc = max(cands)
+    return path, doc
+
+
+def compare_to_baseline(rows, baseline_doc, threshold: float):
+    """Per-benchmark deltas vs a baseline doc.
+
+    Returns (deltas, regressions): deltas is [(name, base_us, new_us,
+    ratio)] for every benchmark present in both runs above the noise
+    floor; regressions is the subset with ratio > threshold.
+    """
+    base = {b["name"]: float(b["median"])
+            for b in baseline_doc.get("benchmarks", [])}
+    deltas, regressions = [], []
+    for name, us, _ in rows:
+        old = base.get(name)
+        if old is None:
+            continue
+        if old < COMPARE_FLOOR_US and us < COMPARE_FLOOR_US:
+            # only when BOTH sides sit in dispatch-overhead territory is
+            # the ratio meaningless; sub-floor -> slow is a real regression
+            continue
+        # a sub-floor baseline is noise by definition: measure against the
+        # floor instead, so jitter around 1us can't fail the gate while a
+        # genuine sub-floor -> slow jump still does
+        ratio = us / max(old, COMPARE_FLOOR_US)
+        deltas.append((name, old, us, ratio))
+        if ratio > threshold:
+            regressions.append((name, old, us, ratio))
+    return deltas, regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -55,6 +141,15 @@ def main() -> None:
                     help="skip the BENCH_<sha>.json trajectory artifact")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<sha>.json (default: cwd)")
+    ap.add_argument("--no-compare", action="store_true",
+                    help="skip the regression check against the most "
+                         "recent committed BENCH_*.json")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="where committed BENCH_*.json baselines live "
+                         "(default: the repo root)")
+    ap.add_argument("--regress-threshold", type=float, default=1.5,
+                    help="fail if any benchmark exceeds this multiple of "
+                         "its baseline median (default 1.5)")
     args = ap.parse_args()
 
     import importlib
@@ -98,10 +193,33 @@ def main() -> None:
         for name, us, derived in rows:
             print(f"{name},{us:.3f},{derived}", flush=True)
         all_rows.extend(rows)
+    out_path = os.path.join(args.json_dir, f"BENCH_{git_sha()}.json")
     if not args.no_json:
-        path = os.path.join(args.json_dir, f"BENCH_{git_sha()}.json")
-        write_json(all_rows, path, quick=args.quick)
-        print(f"wrote {path}", file=sys.stderr)
+        write_json(all_rows, out_path, quick=args.quick)
+        print(f"wrote {out_path}", file=sys.stderr)
+    if not args.no_compare:
+        baseline_dir = args.baseline_dir or os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))
+        base_path, base_doc = load_baseline(baseline_dir, out_path,
+                                            quick=args.quick)
+        if base_doc is None:
+            print("no comparable committed BENCH_*.json baseline; "
+                  "skipping regression check", file=sys.stderr)
+            return
+        deltas, regressions = compare_to_baseline(
+            all_rows, base_doc, args.regress_threshold)
+        print(f"deltas vs {base_path} "
+              f"({base_doc.get('git_sha', '?')}):", file=sys.stderr)
+        for name, old, new, ratio in deltas:
+            print(f"  {name}: {old:.1f} -> {new:.1f} us ({ratio:.2f}x)",
+                  file=sys.stderr)
+        if regressions:
+            print(f"PERF REGRESSION (> {args.regress_threshold}x "
+                  f"baseline):", file=sys.stderr)
+            for name, old, new, ratio in regressions:
+                print(f"  {name}: {old:.1f} -> {new:.1f} us "
+                      f"({ratio:.2f}x)", file=sys.stderr)
+            sys.exit(2)
 
 
 if __name__ == "__main__":

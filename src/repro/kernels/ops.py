@@ -87,15 +87,20 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     """Attention of new tokens against a block-pooled KV cache.
 
     q: [B, Hq, T, D]; pools: [N, Hkv, bs, D]; block_tables: [B, M] int32;
-    qpos: [B, T] absolute positions of the query tokens.  The Pallas
-    kernel serves the decode shape (T == 1); chunked prefill (T > 1) uses
-    the reference gather, which XLA fuses the same way.
+    qpos: [B, T] absolute positions of the query tokens.  Pallas serves
+    both shapes: the decode kernel for T == 1 and the fused paged-prefill
+    kernel for T > 1 (chunked prefill and mixed prefill/decode steps) —
+    the whole serving hot loop is fixed-stride block DMAs.
     """
-    if _pick(impl) == "pallas" and q.shape[2] == 1:
-        out = _pa.paged_attention(q[:, :, 0, :], k_pool, v_pool,
-                                  block_tables, qpos[:, 0] + 1, scale=scale,
-                                  interpret=not _on_tpu())
-        return out[:, :, None, :]
+    if _pick(impl) == "pallas":
+        if q.shape[2] == 1:
+            out = _pa.paged_attention(q[:, :, 0, :], k_pool, v_pool,
+                                      block_tables, qpos[:, 0] + 1,
+                                      scale=scale, interpret=not _on_tpu())
+            return out[:, :, None, :]
+        return _pa.paged_prefill_attention(q, k_pool, v_pool, block_tables,
+                                           qpos, scale=scale,
+                                           interpret=not _on_tpu())
     return ref.paged_attention(q, k_pool, v_pool, block_tables, qpos,
                                scale=scale)
 

@@ -1,25 +1,38 @@
-"""Paged-attention decode kernel: block-table KV gather with fixed strides.
+"""Paged-attention kernels: block-table KV gathers with fixed strides.
 
-One new token per sequence attends over its whole history, which lives in
-a pool of fixed-size KV blocks (serving/kv_cache.py).  The block table is
-a scalar-prefetch operand (``PrefetchScalarGridSpec``), so the index maps
-translate *logical* block j of row b into the *physical* pool block
-``table[b, j]`` before the kernel body runs — each grid step's K/V tile is
-one fixed-stride DMA
+Two entry points over the same pool of fixed-size KV blocks
+(serving/kv_cache.py):
+
+  * :func:`paged_attention` — the decode shape: ONE new token per row
+    attends over its whole history.
+  * :func:`paged_prefill_attention` — the prefill/mixed shape: a
+    ``T``-token query tile per row (a chunk of prompt, or a decode row
+    padded to the chunk width) attends over the same block-table KV, with
+    per-query positions so causal in-chunk masking and mixed
+    prefill/decode batches are the *same* mask arithmetic.
+
+In both, the block table is a scalar-prefetch operand
+(``PrefetchScalarGridSpec``), so the index maps translate *logical* block
+j of row b into the *physical* pool block ``table[b, j]`` before the
+kernel body runs — each grid step's K/V tile is one fixed-stride DMA
 
     addr = pool_base + table[b, j] * BLOCK_STRIDE
 
 exactly the Bebop-page addressing discipline applied to generation state.
 Inside a block there are no data-dependent branches: validity is position
-arithmetic (``j*bs + lane < ctx``) folded into the mask, and the online-
+arithmetic (``j*bs + lane <= qpos``) folded into the mask, and the online-
 softmax update is the same branchless schedule as flash_attention.py.
 Blocks entirely past a row's context are skipped at block granularity with
 ``pl.when`` — no FLOPs, no VMEM traffic beyond the prefetched table.
 
-Grid: (batch, kv_head, logical_block) with the block axis innermost and
-sequential, carrying running max / denominator / accumulator in VMEM.
+Decode grid: (batch, kv_head, logical_block) with the block axis innermost
+and sequential, carrying running max / denominator / accumulator in VMEM.
 GQA comes for free: queries arrive grouped per KV head ([B, Hkv, g, D]),
-so all g grouped heads share each gathered KV tile.
+so all g grouped heads share each gathered KV tile.  Prefill grid:
+(batch, kv_head, q_tile, logical_block) — flash_attention's schedule with
+the contiguous KV axis replaced by table-addressed block DMAs, and the g
+grouped q heads folded into the q-tile rows so they too share each
+gathered KV tile.
 """
 from __future__ import annotations
 
@@ -135,3 +148,130 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
       qg, k_pool, v_pool)
     return out.reshape(b, hq, d)
+
+
+def _paged_prefill_kernel(tbl_ref, ctx_ref, qpos_ref, q_ref, k_ref, v_ref,
+                          o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                          block_size: int, num_blocks: int):
+    bi = pl.program_id(0)
+    ji = pl.program_id(3)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[bi]                       # valid tokens for this row
+    base = ji * block_size                  # logical position of the block
+
+    @pl.when(base < ctx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [tq, d]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bs, d]
+        v = v_ref[0, 0].astype(jnp.float32)                # [bs, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [tq,bs]
+        # per-query causal mask: key position s participates for query t
+        # iff s <= qpos[t].  Because the chunk's own K/V were scattered
+        # into the pool before this call, in-chunk causality is the SAME
+        # arithmetic as history masking — no second mask, no branches.
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qp = qpos_ref[0]                                   # [tq] int32
+        s = jnp.where(kpos <= qp[:, None], s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]                         # [tq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        correction = jnp.exp(m_prev - m_new)
+        l_new = l_ref[...][:, :1] * correction \
+            + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * correction + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ji == num_blocks - 1)
+    def _emit():
+        l = l_ref[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)     # ctx == 0 rows emit zeros
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_q",
+                                             "interpret"))
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            qpos: jax.Array, *,
+                            scale: Optional[float] = None,
+                            block_q: int = 128,
+                            interpret: bool = True) -> jax.Array:
+    """Multi-token (chunked-prefill / mixed-step) paged attention.
+
+    q: [B, Hq, T, D] query tiles (T = prefill chunk; decode rows in a
+    mixed batch arrive padded to T with repeated positions); k_pool /
+    v_pool: [N, Hkv, bs, D]; block_tables: [B, M] int32; qpos: [B, T]
+    absolute positions of the query tokens (key position s participates
+    for query (b, t) iff ``s <= qpos[b, t]``).  Returns [B, Hq, T, D].
+
+    GQA shares KV tiles the same way decode does: the g grouped q heads
+    are folded into the q-tile row axis ([B, Hkv, g*T, D], each row
+    carrying its own qpos), so one gathered K/V block feeds every head of
+    its KV group instead of being re-fetched g times.
+    """
+    b, hq, t, d = q.shape
+    _, hkv, bs, _ = k_pool.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    m = block_tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    gt = g * t
+    qg = q.reshape(b, hkv, gt, d)
+    qpos_g = jnp.broadcast_to(qpos[:, None, :], (b, g, t)).reshape(b, gt)
+    block_q = min(block_q, gt)
+    while gt % block_q:      # any chunk size works, never a shape crash
+        block_q -= 1
+    # block skipping is per row: the whole tile's history ends at the
+    # row's max query position
+    ctx_lens = jnp.max(qpos, axis=1) + 1
+
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale,
+                               block_size=bs, num_blocks=m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, gt // block_q, m),
+        in_specs=[
+            pl.BlockSpec((1, block_q),
+                         lambda bi, hi, qi, ji, tbl, ctx: (bi, qi)),
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ji, tbl, ctx: (bi, hi, qi, 0)),
+            # same fixed-stride gather as decode: physical block id from
+            # the prefetched table, one DMA per KV head (not per q head)
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda bi, hi, qi, ji, tbl, ctx:
+                         (tbl[bi, ji], hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda bi, hi, qi, ji, tbl, ctx:
+                         (tbl[bi, ji], hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ji, tbl, ctx:
+                               (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # denominator
+            pltpu.VMEM((block_q, d), jnp.float32),     # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gt, d), q.dtype),
+        grid_spec=grid_spec,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
+      qpos_g.astype(jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(b, hq, t, d)

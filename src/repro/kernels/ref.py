@@ -149,8 +149,13 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     ``s <= qpos[b, t]`` (causal over the request's own history).
 
     Semantically identical to :func:`attention` against the contiguous
-    cache the table describes; the Pallas kernel gathers blocks by table
-    lookup instead of materializing the [B, M*bs, ...] view.
+    cache the table describes; the Pallas kernels gather blocks by table
+    lookup instead of materializing the [B, M*bs, ...] view.  This single
+    oracle covers both kernel shapes: ``paged_attention`` (T == 1 decode)
+    and ``paged_prefill_attention`` (T > 1 chunked prefill / mixed
+    prefill+decode steps, where decode rows arrive padded to the chunk
+    width with repeated qpos — the per-query mask makes padding rows
+    harmless duplicates, never new information).
     """
     b, hq, t, d = q.shape
     _, hkv, bs, _ = k_pool.shape

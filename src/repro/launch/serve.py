@@ -25,6 +25,15 @@ def main(argv=None) -> int:
                     help="prompt tokens prefilled per chunked step")
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="KV pool size in blocks (0 = auto from max-batch)")
+    ap.add_argument("--max-step-tokens", type=int, default=0,
+                    help="budget of NEW tokens per fused step: decode rows "
+                         "cost 1 each, prefilling rows share the remainder "
+                         "up to --prefill-chunk (0 = no budget)")
+    ap.add_argument("--blocking-prefill", action="store_true",
+                    help="disable fused prefill/decode steps: admission "
+                         "runs a request's whole chunked prefill before "
+                         "in-flight rows take their next decode step "
+                         "(baseline scheduler)")
     ap.add_argument("--dense-cache", action="store_true",
                     help="disable the paged KV cache / mixed-length "
                          "scheduler and serve with the dense batcher")
@@ -46,7 +55,9 @@ def main(argv=None) -> int:
                                      paged=not args.dense_cache,
                                      block_size=args.block_size,
                                      prefill_chunk=args.prefill_chunk,
-                                     num_blocks=args.num_blocks))
+                                     num_blocks=args.num_blocks,
+                                     fused_prefill=not args.blocking_prefill,
+                                     max_step_tokens=args.max_step_tokens))
     server = build_server(engine)
     host, port, lsock = server.listen_tcp(args.host, args.port)
     mode = "paged" if not args.dense_cache and engine.supports_paged \

@@ -316,13 +316,19 @@ def _decode_attend(q, k, v, cfg: ModelConfig, pos):
 
 def attention_paged(p: Params, x: jax.Array, cfg: ModelConfig,
                     k_pool: jax.Array, v_pool: jax.Array,
-                    block_tables: jax.Array, positions: jax.Array):
+                    block_tables: jax.Array, positions: jax.Array,
+                    last_idx: Optional[jax.Array] = None):
     """Attention for chunked prefill / decode against a paged KV pool.
 
-    x: [B, C, D] new tokens (decode: C == 1; prefill: C == chunk).
-    k_pool / v_pool: [N, Hkv, bs, hd] fixed-size block pools (one layer's
-    slice).  block_tables: [B, M] int32.  positions: [B, C] absolute
-    positions of the new tokens.
+    x: [B, C, D] new tokens (decode: C == 1; prefill: C == chunk; mixed
+    prefill/decode steps: every row is C wide, with ``last_idx[b] + 1``
+    *valid* tokens — a decode row carries 1, a prefilling row carries its
+    chunk slice).  k_pool / v_pool: [N, Hkv, bs, hd] fixed-size block
+    pools (one layer's slice).  block_tables: [B, M] int32.  positions:
+    [B, C] absolute positions of the new tokens.  last_idx: optional [B]
+    per-row index of the last valid token; tokens past it are padding and
+    their K/V are routed to the null block (block 0) so they can never
+    touch live cache state.
 
     The new K/V are scattered into the pool at fixed-stride addresses
     (block = table[pos // bs], slot = pos % bs), then the queries attend
@@ -340,6 +346,15 @@ def attention_paged(p: Params, x: jax.Array, cfg: ModelConfig,
     pos = jnp.clip(positions, 0, m * bs - 1)
     blk = jnp.take_along_axis(block_tables, pos // bs, axis=1)   # [B, C]
     slot = pos % bs
+    if last_idx is not None:
+        # per-row token counts: rows in a mixed step share one chunk
+        # width, but a decode row must not let its C-1 padding tokens
+        # overwrite the real K/V it just wrote at the same position —
+        # route every invalid token's write to the null block instead
+        valid = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1) \
+            <= last_idx[:, None].astype(jnp.int32)
+        blk = jnp.where(valid, blk, 0)
+        slot = jnp.where(valid, slot, 0)
     kk = jnp.moveaxis(k_new, 1, 2).reshape(b * c, cfg.num_kv_heads,
                                            cfg.head_dim)
     vv = jnp.moveaxis(v_new, 1, 2).reshape(b * c, cfg.num_kv_heads,

@@ -96,11 +96,13 @@ def decoder_layer_prefill(p: Params, x, cfg: ModelConfig, positions,
 
 
 def decoder_layer_paged(p: Params, x, cfg: ModelConfig, k_pool, v_pool,
-                        block_tables, positions):
-    """One decoder layer against a paged KV pool (prefill chunk or decode)."""
+                        block_tables, positions, last_idx=None):
+    """One decoder layer against a paged KV pool (prefill chunk, decode,
+    or a mixed prefill/decode step with per-row token counts)."""
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     att, pools = L.attention_paged(p["attn"], h, cfg, k_pool, v_pool,
-                                   block_tables, positions)
+                                   block_tables, positions,
+                                   last_idx=last_idx)
     x = x + att
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
     if cfg.moe is not None:
@@ -252,13 +254,17 @@ class DecoderLM:
     def paged_step(self, params: Params, tokens: jax.Array, pool,
                    block_tables: jax.Array, positions: jax.Array,
                    last_idx: jax.Array):
-        """Advance C tokens per row against the paged pool.
+        """Advance up to C tokens per row against the paged pool.
 
-        tokens: [B, C] (decode: C == 1; chunked prefill: C == chunk);
+        tokens: [B, C] (decode: C == 1; chunked prefill: C == chunk;
+        mixed prefill/decode step: one fixed width C for every row);
         pool: {"k","v"} [L, N, Hkv, bs, hd]; block_tables: [B, M] int32;
-        positions: [B, C] absolute positions; last_idx: [B] index of each
-        row's last *valid* token within the chunk (prefill chunks are
-        right-padded).  Returns (logits [B, V] at last_idx, new pool).
+        positions: [B, C] absolute positions; last_idx: [B] per-row index
+        of each row's last *valid* token within the chunk — a decode row
+        advances 1 token (last_idx 0), a prefilling row advances
+        ``last_idx + 1`` prompt tokens, and padding past last_idx writes
+        only to the null block.  Returns (logits [B, V] at last_idx,
+        new pool).
         """
         cfg = self.cfg
         x = L.embed(params, tokens, cfg)
@@ -267,7 +273,8 @@ class DecoderLM:
             layer_p, k_l, v_l = xs
             layer_p = _gather_layer(layer_p, cfg)
             x, (k_l, v_l) = decoder_layer_paged(layer_p, x, cfg, k_l, v_l,
-                                                block_tables, positions)
+                                                block_tables, positions,
+                                                last_idx=last_idx)
             return x, (k_l, v_l)
 
         x, (k_new, v_new) = jax.lax.scan(

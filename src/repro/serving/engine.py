@@ -27,9 +27,10 @@ from __future__ import annotations
 import collections
 import concurrent.futures as _cf
 import dataclasses
+import logging
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import get_model
 from .kv_cache import PagedKVCache
+
+_log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -53,6 +56,17 @@ class ServeConfig:
     block_size: int = 16        # tokens per KV block (64B-alignment rounds up)
     prefill_chunk: int = 32     # prompt tokens prefilled per chunked step
     num_blocks: int = 0         # 0 = auto: max_batch * blocks_per_seq + null
+    # fused prefill/decode scheduling: admission installs a
+    # prefill-in-progress row and the scheduler interleaves its chunks
+    # with decode steps, so admitting a long prompt never stalls in-flight
+    # generations.  False restores the blocking prefill loop (benchmark
+    # baseline / bisection escape hatch).
+    fused_prefill: bool = True
+    # per-step budget of NEW tokens a fused step may process (decode rows
+    # count 1 each; prefilling rows share the remainder, clamped to
+    # prefill_chunk).  0 = no budget: every prefilling row advances a
+    # full chunk per step.
+    max_step_tokens: int = 0
 
 
 class Engine:
@@ -162,8 +176,8 @@ class ShedError(RuntimeError):
     """Request dropped by the scheduler (queue overflow or expired deadline)."""
 
 
-@dataclasses.dataclass
-class _Pending:
+@dataclasses.dataclass(eq=False)   # identity semantics: queues/slot lists
+class _Pending:                    # look these up with `in` / `.remove()`,
     """One admitted request group: [B, T] prompt rows awaiting assembly."""
 
     tokens: np.ndarray
@@ -208,7 +222,8 @@ class ContinuousBatcher:
         self._cond = threading.Condition()
         self._closed = False
         self.stats = {"requests": 0, "rows": 0, "batches": 0,
-                      "batched_rows": 0, "shed": 0}
+                      "batched_rows": 0, "shed": 0, "worker_errors": 0}
+        self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-batcher")
         self._worker.start()
@@ -314,7 +329,14 @@ class ContinuousBatcher:
             except Exception:  # noqa: BLE001 - the worker must survive
                 # _execute fails futures itself; anything escaping here
                 # (e.g. InvalidStateError from a racing cancel) must not
-                # kill the only worker thread.
+                # kill the only worker thread — but a silent infinite
+                # retry is unobservable, so count it and log the first.
+                self.stats["worker_errors"] += 1
+                if not self._worker_error_logged:
+                    self._worker_error_logged = True
+                    _log.exception(
+                        "ContinuousBatcher worker step raised; continuing "
+                        "(further escapes counted in stats['worker_errors'])")
                 continue
 
     def _execute(self, group: List[_Pending]) -> None:
@@ -374,8 +396,8 @@ class ContinuousBatcher:
 # --------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class _PagedReq:
+@dataclasses.dataclass(eq=False)   # identity semantics: field-wise eq would
+class _PagedReq:                   # compare [B, T] arrays of mixed shapes
     """One in-flight request: rows share a prompt and advance in lockstep."""
 
     tokens: np.ndarray                  # [B, T] prompt
@@ -384,6 +406,7 @@ class _PagedReq:
     deadline: Optional[Any]
     future: _cf.Future
     rid: int
+    on_token: Optional[Callable[[int, np.ndarray], None]] = None
     enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
     # runtime state (set at admission)
     tables: Optional[np.ndarray] = None     # [B, M] int32 block tables
@@ -400,8 +423,23 @@ class _PagedReq:
     def seq_len(self) -> int:
         return self.tokens.shape[1]
 
+    @property
+    def prefilling(self) -> bool:
+        """Prompt tokens remain to be written into the paged cache."""
+        return self.pos_next < self.seq_len
+
     def expired(self) -> bool:
         return self.deadline is not None and self.deadline.expired()
+
+    def emit(self, tok: np.ndarray) -> None:
+        self.out.append(tok)
+        if self.on_token is not None:
+            try:
+                self.on_token(len(self.out) - 1, tok)
+            except Exception:  # noqa: BLE001 - a hook must never be able
+                # to desync scheduler state (skipped pos_next/next_tok
+                # updates would re-feed and duplicate this token)
+                _log.exception("on_token callback raised; ignoring")
 
 
 class PagedBatcher:
@@ -411,13 +449,24 @@ class PagedBatcher:
     (serving/kv_cache.py), so batch assembly is just "which rows are
     live": one jitted :meth:`~repro.models.transformer.DecoderLM.paged_step`
     advances all active rows regardless of their prompt lengths or
-    positions, prompts are prefilled in ``prefill_chunk``-token chunks,
-    and new requests slot in *between decode steps* of in-flight ones —
-    no shape-compatible grouping, no whole-group re-prefill.
+    positions, and new requests slot in *between decode steps* of
+    in-flight ones — no shape-compatible grouping, no whole-group
+    re-prefill.
+
+    Prefill never blocks the batch: admission only installs a
+    prefill-in-progress row into free slots, and the scheduler runs
+    *fused* steps — one ``paged_step`` call of chunk width advances every
+    decode row by 1 token AND every prefilling row by up to
+    ``prefill_chunk`` prompt tokens (per-row ``last_idx`` carries the
+    valid counts), budgeted by ``ServeConfig.max_step_tokens``.  p50
+    inter-token latency of in-flight decodes is therefore O(1 step) under
+    long-prompt admission instead of O(prompt length).
+    ``fused_prefill=False`` restores the blocking chunked-prefill loop
+    (the benchmark baseline).
 
     Shedding happens at three points: on submit (queue full / already
-    expired), at admission (expired in queue), and before each decode
-    step (expired mid-generation requests are evicted, their blocks
+    expired), at admission (expired in queue), and before each step
+    (expired requests — including mid-prefill — are evicted, their blocks
     returned to the pool, and their prefix delivered — same contract as
     the dense path).  Requests the pool can never hold (more rows than
     ``max_batch`` or prompts longer than the table) fall back to the
@@ -435,6 +484,8 @@ class PagedBatcher:
         self.max_batch = max_batch or sc.max_batch
         self.max_queue = max_queue
         self.prefill_chunk = max(1, sc.prefill_chunk)
+        self.fused = bool(sc.fused_prefill)
+        self.max_step_tokens = max(0, int(sc.max_step_tokens))
         self.cache = PagedKVCache(
             num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, cache_len=sc.cache_len,
@@ -442,7 +493,7 @@ class PagedBatcher:
             max_concurrent=self.max_batch, dtype=cfg.dtype)
         self.cache.pool = engine.model.init_paged_pool(
             self.cache.layout.num_blocks, self.cache.block_size)
-        self._step = engine.paged_step_fn()
+        self._step_fn = engine.paged_step_fn()
         self._queue: collections.deque = collections.deque()
         self._cond = threading.Condition()
         self._closed = False
@@ -452,7 +503,9 @@ class PagedBatcher:
         self._next_rid = 0
         self.stats = {"requests": 0, "rows": 0, "shed": 0, "decode_steps": 0,
                       "batched_rows": 0, "prefill_chunks": 0,
-                      "admitted_in_flight": 0, "dense_fallbacks": 0}
+                      "mixed_steps": 0, "admitted_in_flight": 0,
+                      "dense_fallbacks": 0, "worker_errors": 0}
+        self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-paged-batcher")
         self._worker.start()
@@ -461,15 +514,26 @@ class PagedBatcher:
     def submit(self, tokens: np.ndarray, *,
                max_new_tokens: Optional[int] = None,
                stop_token: Optional[int] = None,
-               deadline=None) -> _cf.Future:
-        """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32."""
+               deadline=None, on_token=None) -> _cf.Future:
+        """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32.
+
+        ``on_token(index, tok)`` is invoked from the worker thread as each
+        token is emitted (latency instrumentation / streaming hooks).
+        """
         tokens = np.atleast_2d(np.asarray(tokens, dtype=np.int32))
         maxn = self.engine.serve.max_new_tokens if max_new_tokens is None \
             else max_new_tokens  # explicit 0 = prefill-only
         with self._cond:
             self._next_rid += 1
             p = _PagedReq(tokens, maxn, stop_token, deadline, _cf.Future(),
-                          self._next_rid)
+                          self._next_rid, on_token)
+            if p.seq_len == 0:
+                # reject at the door: an installed 0-token request has no
+                # prefill to run and no next_tok to feed — it would poison
+                # the SHARED step and fail every in-flight request
+                self.stats["shed"] += 1
+                p.future.set_exception(ShedError("empty prompt"))
+                return p.future
             if self._closed:
                 self.stats["shed"] += 1
                 p.future.set_exception(ShedError("batcher closed"))
@@ -505,8 +569,19 @@ class PagedBatcher:
             try:
                 self._admit()
                 if self._active:
-                    self._decode_step()
+                    self._step()
             except Exception:  # noqa: BLE001 - the worker must survive
+                # per-request failure paths resolve futures themselves;
+                # anything escaping here must not kill the only worker
+                # thread — but a silent infinite retry is a wedged server
+                # nobody can see, so count it and log the first.
+                self.stats["worker_errors"] += 1
+                if not self._worker_error_logged:
+                    self._worker_error_logged = True
+                    _log.exception(
+                        "PagedBatcher worker step raised; continuing "
+                        "(further escapes counted in "
+                        "stats['worker_errors'])")
                 continue
 
     def _take_admittable(self) -> Tuple[Optional[_PagedReq],
@@ -563,7 +638,10 @@ class PagedBatcher:
             if self._active:
                 self.stats["admitted_in_flight"] += 1
             try:
-                self._prefill(req)
+                if self.fused:
+                    self._install(req)
+                else:
+                    self._prefill_blocking(req)
             except Exception as e:  # noqa: BLE001 - fail THIS request only
                 self._retire(req, exc=e)
 
@@ -582,39 +660,16 @@ class PagedBatcher:
         if not p.future.done():
             p.future.set_result(out)
 
-    # -- chunked prefill ----------------------------------------------------
-    def _prefill(self, req: _PagedReq) -> None:
+    # -- admission install (fused path: no device work) ---------------------
+    def _install(self, req: _PagedReq) -> None:
+        """Give the request blocks + batch slots; prefill happens in the
+        scheduler's fused steps, never as a blocking loop here."""
         rows, t = req.rows, req.seq_len
         # admission guaranteed t + max_new <= layout.tokens, so every
         # position this request will ever write is covered by its table
         req.tables = np.stack([
             self.cache.allocate((req.rid, r), t + req.max_new_tokens)
             for r in range(rows)])
-        c = self.prefill_chunk
-        padded = -(-t // c) * c
-        toks = np.zeros((rows, padded), np.int32)
-        toks[:, :t] = req.tokens
-        tables_j = jnp.asarray(req.tables)
-        logits = None
-        for start in range(0, padded, c):
-            if start and req.expired():
-                # mid-prefill expiry: deliver the empty prefix (the dense
-                # path's contract: prefill done, zero tokens generated)
-                self._retire(req)
-                return
-            pos = np.broadcast_to(
-                start + np.arange(c, dtype=np.int32), (rows, c))
-            last = np.full((rows,), min(t - 1 - start, c - 1), np.int32)
-            logits, self.cache.pool = self._step(
-                self.engine.params, jnp.asarray(toks[:, start:start + c]),
-                self.cache.pool, tables_j, jnp.asarray(pos),
-                jnp.asarray(last))
-            self.stats["prefill_chunks"] += 1
-        req.pos_next = t
-        req.next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
-        if req.max_new_tokens <= 0 or req.expired():
-            self._retire(req)
-            return
         for i in range(self.max_batch):
             if len(req.slots) == rows:
                 break
@@ -623,17 +678,150 @@ class PagedBatcher:
                 req.slots.append(i)
         self._active.append(req)
 
-    # -- decode -------------------------------------------------------------
-    def _decode_step(self) -> None:
-        m = self.cache.blocks_per_seq
+    # -- blocking chunked prefill (fused_prefill=False baseline) ------------
+    def _prefill_blocking(self, req: _PagedReq) -> None:
+        """Same install as the fused path, then run every prompt chunk to
+        completion before returning — the scheduler the fused steps
+        replace (kept as the benchmark baseline)."""
+        self._install(req)
+        rows, t = req.rows, req.seq_len
+        c = self.prefill_chunk
+        tables_j = jnp.asarray(req.tables)
+        logits = None
+        while req.pos_next < t:
+            if req.pos_next and req.expired():
+                # mid-prefill expiry: deliver the empty prefix (the dense
+                # path's contract: prefill done, zero tokens generated)
+                self._retire(req)
+                return
+            adv = min(c, t - req.pos_next)
+            toks = np.zeros((rows, c), np.int32)
+            toks[:, :adv] = req.tokens[:, req.pos_next:req.pos_next + adv]
+            pos = np.broadcast_to(
+                req.pos_next + np.minimum(np.arange(c, dtype=np.int32),
+                                          adv - 1), (rows, c))
+            last = np.full((rows,), adv - 1, np.int32)
+            logits, self.cache.pool = self._step_fn(
+                self.engine.params, jnp.asarray(toks), self.cache.pool,
+                tables_j, jnp.asarray(pos), jnp.asarray(last))
+            self.stats["prefill_chunks"] += 1
+            req.pos_next += adv
+        req.next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+        if req.max_new_tokens <= 0 or req.expired():
+            self._retire(req)
+
+    # -- scheduling ---------------------------------------------------------
+    def _table_width(self, max_ctx: int) -> int:
+        """Block-table columns needed for ``max_ctx`` tokens, rounded up to
+        a power of two (bounded set of jit shapes), capped at the layout.
+
+        Short-context batches stop paying ``blocks_per_seq`` grid steps of
+        ``pl.when`` skips in the kernels: the tables are sliced to this
+        width before the call, so the block axis of the grid is
+        ``ceil(max_ctx / bs)`` (rounded) instead of the full table.
+        """
+        need = max(1, -(-max_ctx // self.cache.block_size))
+        w = 1
+        while w < need:
+            w <<= 1
+        return min(w, self.cache.blocks_per_seq)
+
+    def _step(self) -> None:
         for req in list(self._active):   # evict expired before device work
-            if req.expired():
+            if req.expired():            # (incl. mid-prefill: blocks back)
                 self._retire(req)
         if not self._active:
             return
+        if any(req.prefilling for req in self._active):
+            self._mixed_step()
+        else:
+            self._decode_step()
+
+    # -- fused mixed prefill/decode step ------------------------------------
+    def _mixed_step(self) -> None:
+        """ONE jitted call: every decode row advances 1 token, every
+        prefilling row advances up to ``prefill_chunk`` prompt tokens.
+
+        All rows share the chunk width C; per-row ``last_idx`` carries how
+        many of the C tokens are real (decode rows: 1).  The model routes
+        padding writes to the null block, and the paged-prefill kernel's
+        per-query position mask makes a padded decode row numerically
+        identical to a width-1 decode — so interleaving costs no separate
+        prefill pass and in-flight decodes never wait out a long prompt.
+        """
+        c = self.prefill_chunk
         b = self.max_batch
+        prefilling = [r for r in self._active if r.prefilling]
+        decoding = [r for r in self._active if not r.prefilling]
+        n_decode = sum(len(r.slots) for r in decoding)
+        n_pf_rows = sum(len(r.slots) for r in prefilling)
+        if self.max_step_tokens > 0:
+            # budget NEW tokens this step: decode rows cost 1 each, the
+            # remainder is split across prefilling rows
+            cap = max(1, (self.max_step_tokens - n_decode)
+                      // max(n_pf_rows, 1))
+            cap = min(cap, c)
+        else:
+            cap = c
+        advances = {req.rid: min(cap, req.seq_len - req.pos_next)
+                    for req in prefilling}
+        max_ctx = max([req.pos_next + advances[req.rid]
+                       for req in prefilling]
+                      + [req.pos_next + 1 for req in decoding])
+        m_used = self._table_width(max_ctx)
+        toks = np.zeros((b, c), np.int32)
+        tables = np.zeros((b, m_used), np.int32)  # null block for idle rows
+        pos = np.zeros((b, c), np.int32)
+        last = np.zeros((b,), np.int32)
+        for i, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            req, r = slot
+            tables[i] = req.tables[r][:m_used]
+            if req.prefilling:
+                adv = advances[req.rid]
+                toks[i, :adv] = req.tokens[r, req.pos_next:req.pos_next + adv]
+                # padding repeats the last valid position (decode rows do
+                # the same): keeps the kernel's per-row ctx tight so the
+                # block-skip elides everything past the real advance
+                pos[i] = req.pos_next + np.minimum(
+                    np.arange(c, dtype=np.int32), adv - 1)
+                last[i] = adv - 1
+            else:
+                toks[i, 0] = req.next_tok[r]
+                pos[i] = req.pos_next     # pads masked via last_idx == 0
+        try:
+            logits, self.cache.pool = self._step_fn(
+                self.engine.params, jnp.asarray(toks), self.cache.pool,
+                jnp.asarray(tables), jnp.asarray(pos), jnp.asarray(last))
+        except Exception as e:  # noqa: BLE001 - fail every member, survive
+            for req in list(self._active):
+                self._retire(req, exc=e)
+            raise
+        self.stats["mixed_steps"] += 1
+        self.stats["prefill_chunks"] += len(prefilling)
+        logits = np.asarray(logits)
+        if decoding:
+            self.stats["decode_steps"] += 1
+            self.stats["batched_rows"] += n_decode
+        for req in list(decoding):
+            self._advance_decode(req, logits)
+        for req in list(prefilling):
+            req.pos_next += advances[req.rid]
+            if not req.prefilling:
+                # prompt fully written: the chunk's last valid logits are
+                # the first generated token (same as blocking prefill)
+                req.next_tok = logits[req.slots].argmax(-1).astype(np.int32)
+                if req.max_new_tokens <= 0 or req.expired():
+                    self._retire(req)
+
+    # -- decode -------------------------------------------------------------
+    def _decode_step(self) -> None:
+        b = self.max_batch
+        max_ctx = max(req.pos_next + 1 for req in self._active)
+        m_used = self._table_width(max_ctx)
         toks = np.zeros((b, 1), np.int32)
-        tables = np.zeros((b, m), np.int32)   # null block for idle rows
+        tables = np.zeros((b, m_used), np.int32)  # null block for idle rows
         pos = np.zeros((b,), np.int32)
         n_rows = 0
         for i, slot in enumerate(self._slots):
@@ -641,11 +829,11 @@ class PagedBatcher:
                 continue
             req, r = slot
             toks[i, 0] = req.next_tok[r]
-            tables[i] = req.tables[r]
+            tables[i] = req.tables[r][:m_used]
             pos[i] = req.pos_next
             n_rows += 1
         try:
-            logits, self.cache.pool = self._step(
+            logits, self.cache.pool = self._step_fn(
                 self.engine.params, jnp.asarray(toks), self.cache.pool,
                 jnp.asarray(tables), jnp.asarray(pos)[:, None],
                 jnp.zeros((b,), jnp.int32))
@@ -657,16 +845,20 @@ class PagedBatcher:
         self.stats["batched_rows"] += n_rows
         logits = np.asarray(logits)
         for req in list(self._active):
-            req.out.append(req.next_tok.copy())   # emit the fed token
-            req.pos_next += 1
-            new = logits[req.slots].argmax(-1).astype(np.int32)
-            if len(req.out) >= req.max_new_tokens:
-                self._retire(req)
-            elif req.stop_token is not None \
-                    and bool((new == req.stop_token).all()):
-                self._retire(req)                 # stop token not emitted
-            else:
-                req.next_tok = new
+            self._advance_decode(req, logits)
+
+    def _advance_decode(self, req: _PagedReq, logits: np.ndarray) -> None:
+        """Emit the fed token, pick the next one, retire if done."""
+        req.emit(req.next_tok.copy())
+        req.pos_next += 1
+        new = logits[req.slots].argmax(-1).astype(np.int32)
+        if len(req.out) >= req.max_new_tokens:
+            self._retire(req)
+        elif req.stop_token is not None \
+                and bool((new == req.stop_token).all()):
+            self._retire(req)                 # stop token not emitted
+        else:
+            req.next_tok = new
 
     # -- retirement ---------------------------------------------------------
     def _retire(self, req: _PagedReq, *,

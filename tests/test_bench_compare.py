@@ -1,0 +1,99 @@
+"""benchmarks/run.py perf-trajectory comparison: the artifact is a gate."""
+import json
+
+from benchmarks.run import (COMPARE_FLOOR_US, compare_to_baseline,
+                            load_baseline, write_json)
+
+
+def _doc(medians, *, quick=True, created="2026-01-01T00:00:00Z",
+         sha="abc1234"):
+    return {
+        "git_sha": sha, "created_utc": created, "quick": quick,
+        "benchmarks": [{"name": n, "median": m, "units": "us_per_call",
+                        "derived": ""} for n, m in medians.items()],
+    }
+
+
+def test_compare_reports_deltas_and_regressions():
+    base = _doc({"a.fast": 100.0, "b.slow": 10.0, "c.gone": 5.0})
+    rows = [("a.fast", 90.0, ""),        # improved
+            ("b.slow", 16.0, ""),        # 1.6x: regression
+            ("d.new", 42.0, "")]         # no baseline: skipped
+    deltas, regressions = compare_to_baseline(rows, base, 1.5)
+    assert [d[0] for d in deltas] == ["a.fast", "b.slow"]
+    assert [r[0] for r in regressions] == ["b.slow"]
+    name, old, new, ratio = regressions[0]
+    assert (old, new) == (10.0, 16.0) and abs(ratio - 1.6) < 1e-9
+
+
+def test_compare_threshold_is_inclusive_boundary():
+    base = _doc({"x": 10.0})
+    _, regressions = compare_to_baseline([("x", 15.0, "")], base, 1.5)
+    assert not regressions                      # exactly 1.5x passes
+    _, regressions = compare_to_baseline([("x", 15.01, "")], base, 1.5)
+    assert regressions
+
+
+def test_compare_ignores_noise_floor_rows():
+    tiny = COMPARE_FLOOR_US / 4
+    base = _doc({"ns.scale": tiny, "real": 100.0})
+    deltas, regressions = compare_to_baseline(
+        [("ns.scale", tiny * 2, ""), ("real", 100.0, "")], base, 1.5)
+    assert [d[0] for d in deltas] == ["real"]   # both sub-floor: skipped
+    assert not regressions
+
+
+def test_compare_subfloor_to_slow_is_still_a_regression():
+    """The floor must not hide a benchmark that regresses from noise-level
+    to genuinely slow."""
+    base = _doc({"x": COMPARE_FLOOR_US / 2})
+    _, regressions = compare_to_baseline([("x", 900.0, "")], base, 1.5)
+    assert [r[0] for r in regressions] == ["x"]
+
+
+def test_compare_subfloor_baseline_jitter_does_not_fail():
+    """A sub-floor baseline is measured against the floor, so dispatch
+    jitter just above 1us never reads as a 1.5x regression."""
+    base = _doc({"x": 0.9})
+    _, regressions = compare_to_baseline(
+        [("x", COMPARE_FLOOR_US * 1.4, "")], base, 1.5)
+    assert not regressions
+
+
+def test_load_baseline_latest_committed_excluding_current(tmp_path):
+    old = tmp_path / "BENCH_old.json"
+    new = tmp_path / "BENCH_new.json"
+    cur = tmp_path / "BENCH_cur.json"
+    old.write_text(json.dumps(_doc({"a": 1.0},
+                                   created="2026-01-01T00:00:00Z")))
+    new.write_text(json.dumps(_doc({"a": 2.0},
+                                   created="2026-02-01T00:00:00Z")))
+    cur.write_text(json.dumps(_doc({"a": 3.0},
+                                   created="2026-03-01T00:00:00Z")))
+    path, doc = load_baseline(str(tmp_path), str(cur), quick=True)
+    assert path == str(new)                     # latest, never itself
+    assert doc["benchmarks"][0]["median"] == 2.0
+
+
+def test_load_baseline_skips_other_quick_mode_and_garbage(tmp_path):
+    (tmp_path / "BENCH_full.json").write_text(
+        json.dumps(_doc({"a": 1.0}, quick=False)))
+    (tmp_path / "BENCH_bad.json").write_text("{not json")
+    path, doc = load_baseline(str(tmp_path), str(tmp_path / "none.json"),
+                              quick=True)
+    assert path is None and doc is None
+    path, doc = load_baseline(str(tmp_path), str(tmp_path / "none.json"),
+                              quick=False)
+    assert path == str(tmp_path / "BENCH_full.json")
+
+
+def test_write_json_roundtrips_through_load(tmp_path):
+    rows = [("k.bench", 12.345, "speedup=2.0x")]
+    out = tmp_path / "BENCH_cafe.json"
+    write_json(rows, str(out), quick=True)
+    path, doc = load_baseline(str(tmp_path), str(tmp_path / "other.json"),
+                              quick=True)
+    assert path == str(out)
+    deltas, regressions = compare_to_baseline(
+        [("k.bench", 12.345, "")], doc, 1.5)
+    assert deltas and not regressions

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.bebop_decode import decode_column, decode_columns
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_prefill_attention)
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
@@ -250,6 +251,123 @@ def test_paged_ref_prefill_chunk_shape(rng):
                               jnp.asarray(qpos))
     assert out.shape == (b, hq, t, d)
     assert np.isfinite(np.asarray(out)).all()
+
+
+# --------------------------------------------------------------------------
+# paged prefill attention (multi-token query tiles through the block table)
+# --------------------------------------------------------------------------
+
+def _prefill_setup(rng, b, hq, hkv, d, bs, m, n, t):
+    q = rng.standard_normal((b, hq, t, d)).astype(np.float32)
+    _, kp, vp, tables = _paged_setup(rng, b, hq, hkv, d, bs, m, n)
+    return q, kp, vp, tables
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,bs,m,n,t", [
+    (3, 4, 2, 16, 8, 4, 32, 8),
+    (2, 8, 1, 64, 16, 4, 16, 16),   # MQA
+    (1, 2, 2, 128, 32, 2, 8, 4),
+    (2, 4, 4, 32, 16, 8, 64, 32),
+])
+def test_paged_prefill_vs_ref(rng, b, hq, hkv, d, bs, m, n, t):
+    """Chunk tiles at per-row start offsets: kernel == reference gather."""
+    q, kp, vp, tables = _prefill_setup(rng, b, hq, hkv, d, bs, m, n, t)
+    starts = rng.integers(0, m * bs - t + 1, b)
+    qpos = (starts[:, None] + np.arange(t)).astype(np.int32)
+    out = paged_prefill_attention(jnp.asarray(q), jnp.asarray(kp),
+                                  jnp.asarray(vp), jnp.asarray(tables),
+                                  jnp.asarray(qpos), interpret=True)
+    expect = ref.paged_attention(jnp.asarray(q), jnp.asarray(kp),
+                                 jnp.asarray(vp), jnp.asarray(tables),
+                                 jnp.asarray(qpos))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_paged_prefill_mixed_rows_vs_ref(rng):
+    """The mixed-step shape: decode rows padded to the chunk width with
+    repeated positions alongside genuinely prefilling rows — one call."""
+    b, hq, hkv, d, bs, m, n, t = 4, 4, 2, 16, 8, 4, 32, 8
+    q, kp, vp, tables = _prefill_setup(rng, b, hq, hkv, d, bs, m, n, t)
+    qpos = np.stack([
+        np.full(t, 19),            # decode row, ctx 20, t-1 pad duplicates
+        5 + np.arange(t),          # prefill chunk at offset 5
+        np.full(t, 0),             # decode row at the very first position
+        np.arange(t),              # prefill chunk from position 0
+    ]).astype(np.int32)
+    out = paged_prefill_attention(jnp.asarray(q), jnp.asarray(kp),
+                                  jnp.asarray(vp), jnp.asarray(tables),
+                                  jnp.asarray(qpos), interpret=True)
+    expect = ref.paged_attention(jnp.asarray(q), jnp.asarray(kp),
+                                 jnp.asarray(vp), jnp.asarray(tables),
+                                 jnp.asarray(qpos))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5, rtol=1e-4)
+    # a padded decode row agrees with the T == 1 decode kernel at token 0
+    dec = paged_attention(jnp.asarray(q[:1, :, 0, :]), jnp.asarray(kp),
+                          jnp.asarray(vp), jnp.asarray(tables[:1]),
+                          jnp.asarray(np.array([20], np.int32)),
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out)[0, :, 0, :],
+                               np.asarray(dec)[0], atol=3e-5, rtol=1e-4)
+
+
+def test_paged_prefill_matches_flash_on_contiguous(rng):
+    """Gathering chunk tiles through the block table == flash attention
+    over the contiguous cache the table describes (per row)."""
+    b, hq, hkv, d, bs, m, n, t = 3, 4, 2, 32, 8, 4, 32, 8
+    q, kp, vp, tables = _prefill_setup(rng, b, hq, hkv, d, bs, m, n, t)
+    ctx = np.array([16, 24, 32], np.int32)       # history INCLUDING chunk
+    qpos = (ctx[:, None] - t + np.arange(t)).astype(np.int32)
+    out = np.asarray(paged_prefill_attention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+        jnp.asarray(tables), jnp.asarray(qpos), interpret=True))
+    k = np.moveaxis(kp[tables], 2, 1).reshape(b, hkv, m * bs, d)
+    v = np.moveaxis(vp[tables], 2, 1).reshape(b, hkv, m * bs, d)
+    for i in range(b):
+        flash = flash_attention(
+            jnp.asarray(q[i:i + 1]), jnp.asarray(k[i:i + 1, :, :ctx[i]]),
+            jnp.asarray(v[i:i + 1, :, :ctx[i]]), causal=True,
+            q_offset=int(ctx[i]) - t, block_q=t, block_k=bs,
+            interpret=True)
+        np.testing.assert_allclose(out[i], np.asarray(flash)[0],
+                                   atol=3e-5, rtol=1e-4)
+
+
+def test_paged_prefill_ignores_unlisted_blocks(rng):
+    """Same isolation contract as decode: scribbling over every block not
+    listed in a row's table changes nothing."""
+    b, hq, hkv, d, bs, m, n, t = 2, 4, 2, 16, 8, 4, 32, 8
+    q, kp, vp, tables = _prefill_setup(rng, b, hq, hkv, d, bs, m, n, t)
+    qpos = np.stack([3 + np.arange(t), 11 + np.arange(t)]).astype(np.int32)
+    args = (jnp.asarray(tables), jnp.asarray(qpos))
+    out1 = np.asarray(paged_prefill_attention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), *args,
+        interpret=True))
+    listed = set(tables.reshape(-1).tolist())
+    scrib_k, scrib_v = kp.copy(), vp.copy()
+    for blk in range(n):
+        if blk not in listed:
+            scrib_k[blk] = 1e3
+            scrib_v[blk] = -1e3
+    out2 = np.asarray(paged_prefill_attention(
+        jnp.asarray(q), jnp.asarray(scrib_k), jnp.asarray(scrib_v), *args,
+        interpret=True))
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_ops_paged_dispatch_prefill_pallas(rng):
+    """ops.paged_attention T > 1 runs the Pallas prefill kernel (no more
+    reference fallback) and agrees with the reference path."""
+    from repro.kernels import ops
+    b, hq, hkv, d, bs, m, n, t = 2, 4, 2, 16, 8, 4, 16, 8
+    q, kp, vp, tables = _prefill_setup(rng, b, hq, hkv, d, bs, m, n, t)
+    qpos = np.stack([np.arange(t), 7 + np.arange(t)]).astype(np.int32)
+    args = tuple(map(jnp.asarray, (q, kp, vp, tables, qpos)))
+    out_pl = ops.paged_attention(*args, impl="pallas")
+    out_ref = ops.paged_attention(*args, impl="reference")
+    np.testing.assert_allclose(np.asarray(out_pl), np.asarray(out_ref),
+                               atol=3e-5, rtol=1e-4)
 
 
 def test_flash_attention_bf16(rng):

@@ -238,6 +238,175 @@ def test_paged_blocks_are_returned(paged):
     assert batcher.cache.num_free_blocks == batcher.cache.allocator.capacity
 
 
+# -- fused prefill/decode scheduling ---------------------------------------
+
+class _FlipDeadline:
+    """Deterministic deadline: live for the first N expiry checks, then
+    expired — lands the expiry mid-prefill without wall-clock races."""
+
+    def __init__(self, live_checks: int):
+        self.remaining = live_checks
+
+    def expired(self) -> bool:
+        self.remaining -= 1
+        return self.remaining < 0
+
+
+@pytest.fixture(scope="module")
+def fused(setup):
+    """Small chunks + a step-token budget so a 40-token prompt takes many
+    fused steps — plenty of room to observe interleaving."""
+    cfg, engine, _ = setup
+    eng = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=8,
+                                  prefill_chunk=4, max_step_tokens=5),
+                 params=engine.params)
+    batcher = PagedBatcher(eng, max_batch=6)
+    yield cfg, eng, batcher
+    batcher.close()
+
+
+def test_fused_decodes_advance_during_prefill(fused):
+    """The tentpole invariant: in-flight decodes receive tokens WHILE a
+    long prompt prefills, and everyone's tokens match their solo run."""
+    cfg, engine, batcher = fused
+    rng = np.random.default_rng(31)
+    dec_prompts = [rng.integers(0, cfg.vocab_size, (1, t)).astype(np.int32)
+                   for t in (5, 9)]
+    long_prompt = rng.integers(0, cfg.vocab_size, (1, 40)).astype(np.int32)
+    solos = [batcher.generate(p, max_new_tokens=8) for p in dec_prompts]
+    solo_long = batcher.generate(long_prompt, max_new_tokens=8)
+
+    stamps = [[] for _ in dec_prompts]
+    futs = [batcher.submit(
+        p, max_new_tokens=8,
+        on_token=lambda idx, tok, i=i: stamps[i].append(
+            batcher.stats["prefill_chunks"]))
+        for i, p in enumerate(dec_prompts)]
+    # make sure the decodes are in flight before the long prompt arrives
+    import time as _time
+    t0 = _time.monotonic()
+    while min(len(s) for s in stamps) < 2:
+        assert _time.monotonic() - t0 < 120, "decodes never started"
+        _time.sleep(0.001)
+    pc_admit = batcher.stats["prefill_chunks"]
+    f_long = batcher.submit(long_prompt, max_new_tokens=8)
+    outs = [f.result(timeout=180) for f in futs]
+    out_long = f_long.result(timeout=180)
+    pc_done = batcher.stats["prefill_chunks"]
+    for solo, out in zip(solos, outs):
+        assert np.array_equal(solo, out)
+    assert np.array_equal(solo_long, out_long)
+    # each stamp records the prefill-chunk counter at token emission: a
+    # stamp strictly inside (pc_admit, pc_done) is a decode token that
+    # arrived while the long prompt's chunks were still being ingested —
+    # the blocking scheduler can never produce one
+    assert pc_done - pc_admit >= 40 // 4, "long prefill too few chunks"
+    mid = [s for ts in stamps for s in ts if pc_admit < s < pc_done]
+    assert mid, "no decode token emitted during the long prompt's prefill"
+    assert batcher.stats["mixed_steps"] > 0
+
+
+def test_fused_admission_during_anothers_prefill(fused):
+    """A request admitted while another's prefill is mid-flight: both
+    prefills interleave through fused steps and both match solo runs."""
+    cfg, engine, batcher = fused
+    rng = np.random.default_rng(37)
+    pa = rng.integers(0, cfg.vocab_size, (1, 40)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (1, 36)).astype(np.int32)
+    solo_a = batcher.generate(pa, max_new_tokens=6)
+    solo_b = batcher.generate(pb, max_new_tokens=6)
+    before = batcher.stats["admitted_in_flight"]
+    fa = batcher.submit(pa, max_new_tokens=6)
+    fb = batcher.submit(pb, max_new_tokens=6)
+    assert np.array_equal(fa.result(timeout=180), solo_a)
+    assert np.array_equal(fb.result(timeout=180), solo_b)
+    assert batcher.stats["admitted_in_flight"] >= before
+
+
+def test_fused_deadline_mid_prefill_returns_blocks(fused):
+    """Expiry mid-prefill delivers the empty prefix and returns every
+    block to the pool — the shed contract holds inside a fused prefill."""
+    cfg, engine, batcher = fused
+    rng = np.random.default_rng(41)
+    p = rng.integers(0, cfg.vocab_size, (1, 40)).astype(np.int32)
+    free_before = batcher.cache.num_free_blocks
+    out = batcher.submit(p, max_new_tokens=8,
+                         deadline=_FlipDeadline(4)).result(timeout=180)
+    assert out.shape == (1, 0)   # admitted, expired before any token
+    assert batcher.cache.num_free_blocks == free_before
+
+
+def test_fused_max_step_tokens_budget(fused):
+    """With max_step_tokens=5 and chunk 4, prefills advance in partial
+    chunks whenever decode rows eat into the budget, and a lone prefill
+    still completes (budget floor is 1 token/step) — always solo-equal."""
+    cfg, engine, batcher = fused
+    rng = np.random.default_rng(43)
+    p = rng.integers(0, cfg.vocab_size, (1, 40)).astype(np.int32)
+    a = batcher.generate(p, max_new_tokens=4)
+    b = batcher.generate(p, max_new_tokens=4)
+    assert np.array_equal(a, b)
+    assert a.shape == (1, 4)
+
+
+def test_empty_prompt_shed_without_poisoning_batch(fused):
+    """A 0-token prompt is rejected at submit; concurrent requests keep
+    generating (the old blocking path failed it solo, the fused shared
+    step must never let it fail the whole batch)."""
+    cfg, engine, batcher = fused
+    rng = np.random.default_rng(53)
+    p = rng.integers(0, cfg.vocab_size, (1, 6)).astype(np.int32)
+    solo = batcher.generate(p, max_new_tokens=5)
+    good = batcher.submit(p, max_new_tokens=5)
+    bad = batcher.submit(np.zeros((1, 0), np.int32), max_new_tokens=5)
+    with pytest.raises(ShedError, match="empty prompt"):
+        bad.result(timeout=60)
+    assert np.array_equal(good.result(timeout=180), solo)
+
+
+def test_on_token_exception_never_desyncs_tokens(fused):
+    """A raising on_token hook must not skip the scheduler's state
+    advance (which would re-feed and duplicate the token)."""
+    cfg, engine, batcher = fused
+    rng = np.random.default_rng(47)
+    p = rng.integers(0, cfg.vocab_size, (1, 7)).astype(np.int32)
+    solo = batcher.generate(p, max_new_tokens=6)
+
+    def _bad_hook(idx, tok):
+        raise RuntimeError("streaming hook exploded")
+    out = batcher.submit(p, max_new_tokens=6,
+                         on_token=_bad_hook).result(timeout=180)
+    assert np.array_equal(out, solo)
+
+
+def test_worker_errors_counted_not_swallowed(setup):
+    """A step exception fails the in-flight requests AND is visible in
+    stats['worker_errors'] instead of being silently retried forever."""
+    cfg, engine, _ = setup
+    eng = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=4),
+                 params=engine.params)
+    batcher = PagedBatcher(eng, max_batch=2)
+    try:
+        def _boom(*a, **kw):
+            raise RuntimeError("injected step failure")
+        batcher._step_fn = _boom
+        p = np.zeros((1, 4), np.int32)
+        fut = batcher.submit(p, max_new_tokens=2)
+        with pytest.raises(RuntimeError, match="injected step failure"):
+            fut.result(timeout=60)
+        import time as _time
+        t0 = _time.monotonic()
+        while batcher.stats["worker_errors"] == 0:
+            assert _time.monotonic() - t0 < 60
+            _time.sleep(0.001)
+        assert batcher.stats["worker_errors"] >= 1
+        # pool is clean: the failed request's blocks came back
+        assert batcher.cache.num_free_blocks == \
+            batcher.cache.allocator.capacity
+    finally:
+        batcher.close()
+
+
 def test_score_monotonic_sanity(setup):
     """Score of model-generated continuation >= score of random tokens."""
     cfg, engine, ch = setup
