@@ -148,12 +148,13 @@ def _engine_bench(engine: Engine):
 def _admission_workload(cfg, *, fused: bool):
     """Run the long-prompt-admission workload; returns (tokens, stalls).
 
-    ``stalls`` is, per in-flight decode request, the WORST inter-token gap
-    overlapping the admission window (long-prompt submit -> long-prompt
-    completion) — exactly the stall a streaming client observes while
-    someone else's prompt is ingested.  The workload runs twice per
-    scheduler (first pass warms every jit shape) and only the second pass
-    is measured.
+    ``stalls`` is, per in-flight decode request and measured pass, the
+    WORST inter-token gap overlapping the admission window (long-prompt
+    submit -> long-prompt completion) — exactly the stall a streaming
+    client observes while someone else's prompt is ingested.  The
+    workload runs 4 times per scheduler: the first pass warms every jit
+    shape, the remaining 3 are measured (pooling passes keeps the p50
+    stable on a noisy shared box).
     """
     engine = Engine(cfg, ServeConfig(
         cache_len=ADM_LONG_T + ADM_CHUNK * 2, max_new_tokens=ADM_DECODE_MAXN,
@@ -164,7 +165,8 @@ def _admission_workload(cfg, *, fused: bool):
                    .astype(np.int32) for _ in range(ADM_DECODE_REQS)]
     long_prompt = rng.integers(0, cfg.vocab_size, (1, ADM_LONG_T)) \
         .astype(np.int32)
-    for _ in range(2):   # first pass = jit warmup, second = measurement
+    stalls = []
+    for run_i in range(4):   # pass 0 = jit warmup, passes 1-3 measured
         batcher = PagedBatcher(engine, max_batch=ADM_DECODE_REQS + 1)
         stamps = [[] for _ in range(ADM_DECODE_REQS)]
         futs = [batcher.submit(
@@ -183,12 +185,13 @@ def _admission_workload(cfg, *, fused: bool):
         t_done = time.monotonic()
         outs = [f.result(timeout=600) for f in futs]
         batcher.close()
-    stalls = []
-    for ts in stamps:
-        window = [b - a for a, b in zip(ts, ts[1:])
-                  if b > t_admit and a < t_done]
-        if window:
-            stalls.append(max(window))
+        if run_i == 0:
+            continue
+        for ts in stamps:
+            window = [b - a for a, b in zip(ts, ts[1:])
+                      if b > t_admit and a < t_done]
+            if window:
+                stalls.append(max(window))
     return outs + [long_out], stalls
 
 
