@@ -24,6 +24,16 @@ buy the serving engine?":
     steps; the fused scheduler interleaves prefill chunks into the same
     ``paged_step`` the decode rows ride, so the stall is O(1 step).
     Outputs are asserted token-identical across schedulers before timing.
+  * ``shared_prefix`` — 16 concurrent requests sharing a 512-token
+    system prompt (each with its own 16-token user suffix), prefix cache
+    on vs off.  With the cache, admission matches the shared prompt
+    block-by-block against the resident prefix index and *shares* the
+    matched KV blocks (a refcount per block, no copy), so per-request
+    prefill shrinks from 528 tokens to the 16-token suffix; without it
+    every request re-prefills the full prompt.  Outputs are asserted
+    token-identical before timing, and the derived column reports
+    ``prefix_hits`` / ``prefix_tokens_reused`` plus the median
+    time-to-first-token per path.
 
 CPU numbers (the CI gate) run the reference paged-attention gather; the
 Pallas kernels are the same schedule on TPU.
@@ -48,6 +58,13 @@ ADM_DECODE_T = 8          # their prompt length
 ADM_DECODE_MAXN = 48      # enough tokens to span the admission window
 ADM_LONG_T = 160          # the admitted long prompt (20 chunks of 8)
 ADM_CHUNK = 8
+
+# shared_prefix workload geometry
+SP_REQS = 16              # concurrent requests sharing the system prompt
+SP_PREFIX_T = 512         # the shared system prompt (32 blocks of 16)
+SP_SUFFIX_T = 16          # per-request unique user suffix
+SP_MAXN = 4               # small: admission prefill is what's measured
+SP_CHUNK = 64
 
 
 def _decode_step_bench(engine: Engine):
@@ -215,6 +232,87 @@ def _mixed_admission_bench(cfg):
     ]
 
 
+def _shared_prefix_workload(cfg, *, prefix_cache: bool):
+    """16 shared-prompt requests through PagedBatcher; returns
+    (outputs, total seconds, median time-to-first-token, stats).
+
+    Every pass draws FRESH per-request suffixes (seeded by pass index,
+    identical across the cached/cold runs), so the timed cached passes
+    measure exactly the advertised scenario — the 512-token system
+    prompt hits the index, each unique suffix still prefills — never
+    the stronger repeat-identical-prompt case a reused prompt list
+    would degenerate into after its first pass.
+    """
+    engine = Engine(cfg, ServeConfig(
+        cache_len=SP_PREFIX_T + SP_SUFFIX_T + SP_MAXN,
+        max_new_tokens=SP_MAXN, max_batch=SP_REQS, prefill_chunk=SP_CHUNK,
+        prefix_cache=prefix_cache))
+    sys_prompt = np.random.default_rng(61) \
+        .integers(0, cfg.vocab_size, (1, SP_PREFIX_T)).astype(np.int32)
+    batcher = PagedBatcher(engine, max_batch=SP_REQS)
+    # prime: prefill-only pass over the bare system prompt registers its
+    # blocks in the prefix index (a no-op on the cold path) — outside
+    # all timing, the way a deployment warms a hot system prompt
+    batcher.generate(sys_prompt, max_new_tokens=0)
+    ttfts: list = []
+    pass_idx = [0]
+
+    def run_once():
+        rng = np.random.default_rng(1000 + pass_idx[0])
+        pass_idx[0] += 1
+        prompts = [np.concatenate(
+            [sys_prompt, rng.integers(0, cfg.vocab_size, (1, SP_SUFFIX_T))
+             .astype(np.int32)], axis=1) for _ in range(SP_REQS)]
+        firsts = [None] * SP_REQS
+        t0s = []
+
+        def mk_hook(i):
+            def hook(idx, tok):
+                if firsts[i] is None:
+                    firsts[i] = time.monotonic()
+            return hook
+
+        futs = []
+        for i, p in enumerate(prompts):
+            t0s.append(time.monotonic())
+            futs.append(batcher.submit(p, max_new_tokens=SP_MAXN,
+                                       on_token=mk_hook(i)))
+        outs = [f.result(timeout=600) for f in futs]
+        ttfts.extend(f - t for f, t in zip(firsts, t0s))
+        return outs
+
+    outs = run_once()   # jit warmup (pass 0: same prompts on both paths)
+    n_warm = len(ttfts)
+    # 5 repeats (median): the cached/cold ratio gates CI, so one noisy
+    # pass on a shared runner must not be able to swing it
+    t_total, _ = bench(run_once, min_time_s=0.0, repeats=5)
+    stats = dict(batcher.stats)
+    batcher.close()
+    return outs, t_total, float(np.median(ttfts[n_warm:])), stats
+
+
+def _shared_prefix_bench(cfg):
+    """Admission cost of 16 requests sharing a 512-token system prompt."""
+    ref_out, t_cold, ttft_cold, _ = _shared_prefix_workload(
+        cfg, prefix_cache=False)
+    got_out, t_warm, ttft_warm, stats = _shared_prefix_workload(
+        cfg, prefix_cache=True)
+    for r, g in zip(ref_out, got_out):
+        assert np.array_equal(r, g), "prefix-cached != cold outputs"
+    assert stats["prefix_hits"] > 0, "prefix cache never hit"
+    return [
+        ("paged_attention.shared_prefix.cold", t_cold * 1e6,
+         f"{SP_REQS} reqs x ({SP_PREFIX_T} shared + {SP_SUFFIX_T})-token "
+         f"prompts, no prefix cache; ttft_p50={ttft_cold * 1e3:.1f}ms"),
+        ("paged_attention.shared_prefix.cached", t_warm * 1e6,
+         f"speedup={t_cold / t_warm:.2f}x "
+         f"ttft_p50={ttft_warm * 1e3:.1f}ms "
+         f"prefix_hits={stats['prefix_hits']} "
+         f"prefix_tokens_reused={stats['prefix_tokens_reused']} "
+         f"cow_copies={stats['cow_copies']}"),
+    ]
+
+
 def run(quick: bool = False):
     cfg = reduced_config(get_config("qwen2-1.5b"))
     engine = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=MAXN,
@@ -222,4 +320,5 @@ def run(quick: bool = False):
     rows = _decode_step_bench(engine)
     rows += _engine_bench(engine)
     rows += _mixed_admission_bench(cfg)
+    rows += _shared_prefix_bench(cfg)
     return rows

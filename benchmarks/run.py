@@ -166,7 +166,10 @@ def main() -> None:
                 "rpc",             # §7.3 / §7.6
                 "kernels",         # device decode layer
                 "serve_ingest",    # wire->device serving path (§8)
-                "paged_attention"):  # paged KV decode vs dense cache
+                "paged_attention"):  # paged KV decode vs dense cache,
+                                     # fused admission, shared_prefix
+                                     # (prefix-cache hit rate in the JSON
+                                     # trajectory via the derived column)
         try:
             modules[key] = importlib.import_module(f".bench_{key}", __package__)
         except ImportError as e:

@@ -34,6 +34,18 @@ def main(argv=None) -> int:
                          "runs a request's whole chunked prefill before "
                          "in-flight rows take their next decode step "
                          "(baseline scheduler)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="automatic prefix caching: match new prompts "
+                         "block-by-block against resident prefixes and "
+                         "share (refcount) the matched KV blocks instead "
+                         "of re-prefilling them (--no-prefix-cache to "
+                         "disable)")
+    ap.add_argument("--prefix-lru-blocks", type=int, default=0,
+                    help="cap on cached-but-unreferenced prefix blocks "
+                         "kept resident between requests (0 = bounded "
+                         "only by the pool; idle entries are evicted "
+                         "when an allocation runs short)")
     ap.add_argument("--dense-cache", action="store_true",
                     help="disable the paged KV cache / mixed-length "
                          "scheduler and serve with the dense batcher")
@@ -57,7 +69,9 @@ def main(argv=None) -> int:
                                      prefill_chunk=args.prefill_chunk,
                                      num_blocks=args.num_blocks,
                                      fused_prefill=not args.blocking_prefill,
-                                     max_step_tokens=args.max_step_tokens))
+                                     max_step_tokens=args.max_step_tokens,
+                                     prefix_cache=args.prefix_cache,
+                                     prefix_lru_blocks=args.prefix_lru_blocks))
     server = build_server(engine)
     host, port, lsock = server.listen_tcp(args.host, args.port)
     mode = "paged" if not args.dense_cache and engine.supports_paged \

@@ -10,9 +10,10 @@ Three layers, one subsystem:
     the paper's "GPU-side deserialization for direct device memory
     placement" (§8) as a serving component.
   * :mod:`.kv_cache` — the block-pooled paged KV cache: fixed-stride
-    64B-aligned KV blocks, a free-list allocator with ownership
-    invariants, and per-request block tables (Bebop-page addressing
-    applied to generation state).
+    64B-aligned KV blocks, a refcounted free-list allocator, per-request
+    block tables (Bebop-page addressing applied to generation state),
+    and automatic prefix caching (content-hash chains over full blocks,
+    copy-on-write sharing, LRU retention of hot prefixes).
   * :mod:`.engine` — jitted prefill/decode steps plus two schedulers:
     :class:`ContinuousBatcher` (dense cache, shape-compatible grouping)
     and :class:`PagedBatcher` (paged cache: chunked prefill, mixed-length
@@ -27,6 +28,6 @@ from .engine import (ContinuousBatcher, Engine, PagedBatcher,  # noqa: F401
                      ServeConfig, ShedError)
 from .ingest import DecodePlan, IngestResult, PageIngest, PlanCache  # noqa: F401
 from .kv_cache import (BlockAllocator, CacheOOM, PagedKVCache,  # noqa: F401
-                       aligned_block_size)
+                       PrefixCache, aligned_block_size, block_keys)
 from .service import (InferenceService, InferenceImpl,  # noqa: F401
                       build_server, decode_token_page, encode_prompt_page)

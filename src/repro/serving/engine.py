@@ -38,7 +38,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import get_model
-from .kv_cache import PagedKVCache
+from .kv_cache import CacheOOM, PagedKVCache, block_keys
 
 _log = logging.getLogger(__name__)
 
@@ -67,6 +67,15 @@ class ServeConfig:
     # prefill_chunk).  0 = no budget: every prefilling row advances a
     # full chunk per step.
     max_step_tokens: int = 0
+    # automatic prefix caching (serving/kv_cache.py PrefixCache): new
+    # prompts are matched block-by-block against already-resident
+    # prefixes, matched blocks are shared (refcounted, copy-on-write on
+    # conflict) and their prefill is skipped entirely.
+    prefix_cache: bool = True
+    # cap on cached-but-unreferenced prefix blocks kept resident between
+    # requests (the LRU).  0 = bounded only by the pool: idle cached
+    # blocks are evicted on demand when an allocation runs short.
+    prefix_lru_blocks: int = 0
 
 
 class Engine:
@@ -343,12 +352,19 @@ class ContinuousBatcher:
         tokens = np.concatenate([p.tokens for p in group], axis=0) \
             if len(group) > 1 else group[0].tokens
         maxn = max(p.max_new_tokens for p in group)
-        # Run to the LATEST member deadline: early members get their full
-        # generation; an expired-by-then straggler still gets the prefix.
-        deadline = None
-        if all(p.deadline is not None for p in group):
-            deadline = max((p.deadline for p in group),
-                           key=lambda d: d.cutoff_ns())
+        # Run to the LATEST FINITE member deadline: early members get
+        # their full generation, and when the cutoff lands mid-batch the
+        # slicing loop below hands every member whatever prefix was
+        # generated by then (an earlier-deadline member keeps tokens past
+        # its own cutoff — surplus, never missing work).  A member
+        # WITHOUT a deadline must not disable mid-flight shedding for the
+        # rest of the group — the old ``all(...)`` guard did exactly that
+        # — so it may itself be truncated at the group's latest deadline;
+        # that is the documented cost of being batched with
+        # deadline-bearing work.
+        with_deadline = [p.deadline for p in group if p.deadline is not None]
+        deadline = max(with_deadline, key=lambda d: d.cutoff_ns()) \
+            if with_deadline else None
         try:
             out = self.engine.generate(tokens, max_new_tokens=maxn,
                                        stop_token=group[0].stop_token,
@@ -464,6 +480,17 @@ class PagedBatcher:
     ``fused_prefill=False`` restores the blocking chunked-prefill loop
     (the benchmark baseline).
 
+    With ``ServeConfig.prefix_cache`` on (the default), admission matches
+    each prompt block-by-block against the content-hash index of
+    already-resident prefixes: matched blocks are shared into the new
+    request's table (refcounted, never copied), prefill starts at the
+    cache-hit boundary, and a write that would touch a still-shared
+    block copy-on-writes a private replacement first.  Finished
+    requests' indexed blocks stay resident in an LRU until the pool
+    needs them back, so a hot system prompt's KV survives between
+    requests.  ``stats["prefix_hits"]`` / ``stats["prefix_tokens_reused"]``
+    / ``stats["cow_copies"]`` expose the cache's behavior.
+
     Shedding happens at three points: on submit (queue full / already
     expired), at admission (expired in queue), and before each step
     (expired requests — including mid-prefill — are evicted, their blocks
@@ -486,14 +513,22 @@ class PagedBatcher:
         self.prefill_chunk = max(1, sc.prefill_chunk)
         self.fused = bool(sc.fused_prefill)
         self.max_step_tokens = max(0, int(sc.max_step_tokens))
+        self.prefix_enabled = bool(sc.prefix_cache)
         self.cache = PagedKVCache(
             num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, cache_len=sc.cache_len,
             block_size=sc.block_size, num_blocks=sc.num_blocks,
-            max_concurrent=self.max_batch, dtype=cfg.dtype)
+            max_concurrent=self.max_batch, dtype=cfg.dtype,
+            prefix_cache=self.prefix_enabled,
+            prefix_lru_blocks=sc.prefix_lru_blocks)
         self.cache.pool = engine.model.init_paged_pool(
             self.cache.layout.num_blocks, self.cache.block_size)
         self._step_fn = engine.paged_step_fn()
+        # copy-on-write: duplicate one pool block (donated, so in place)
+        self._copy_block = jax.jit(
+            lambda pool, src, dst: jax.tree_util.tree_map(
+                lambda a: a.at[:, dst].set(a[:, src]), pool),
+            donate_argnums=(0,))
         self._queue: collections.deque = collections.deque()
         self._cond = threading.Condition()
         self._closed = False
@@ -504,7 +539,9 @@ class PagedBatcher:
         self.stats = {"requests": 0, "rows": 0, "shed": 0, "decode_steps": 0,
                       "batched_rows": 0, "prefill_chunks": 0,
                       "mixed_steps": 0, "admitted_in_flight": 0,
-                      "dense_fallbacks": 0, "worker_errors": 0}
+                      "dense_fallbacks": 0, "worker_errors": 0,
+                      "prefix_hits": 0, "prefix_tokens_reused": 0,
+                      "cow_copies": 0}
         self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-paged-batcher")
@@ -593,8 +630,14 @@ class PagedBatcher:
         still waiting (the earlier one keeps its queue position).
         """
         with self._cond:
+            if not self._queue:   # the common mid-generation case: don't
+                return None, None  # pay the LRU scan below per decode step
             free_slots = self.max_batch - sum(
                 1 for s in self._slots if s is not None)
+            # reclaimable walks the prefix LRU (O(idle cached blocks));
+            # nothing in this loop allocates or evicts, so hoist the scan
+            # out of the per-queued-request iteration
+            free_budget = self.cache.num_free_blocks + self.cache.reclaimable
             for p in list(self._queue):
                 if p.expired():
                     self._queue.remove(p)
@@ -621,8 +664,11 @@ class PagedBatcher:
                         f"request needs {need} KV blocks, pool capacity "
                         f"is {self.cache.allocator.capacity}"))
                     continue
-                if p.rows <= free_slots \
-                        and need <= self.cache.num_free_blocks:
+                if p.rows <= free_slots and need <= free_budget:
+                    # free_budget counts idle prefix-cache blocks: a
+                    # CacheOOM evicts them before shedding, and matched
+                    # blocks are shared rather than consumed, so this
+                    # bound is conservative
                     self._queue.remove(p)
                     return p, None
             return None, None
@@ -663,13 +709,41 @@ class PagedBatcher:
     # -- admission install (fused path: no device work) ---------------------
     def _install(self, req: _PagedReq) -> None:
         """Give the request blocks + batch slots; prefill happens in the
-        scheduler's fused steps, never as a blocking loop here."""
+        scheduler's fused steps, never as a blocking loop here.
+
+        With the prefix cache on, each row's prompt is first matched
+        block-by-block against already-resident prefixes: matched blocks
+        are shared (a refcount, not a copy) and ``pos_next`` starts at
+        the cache-hit boundary, so their prefill is skipped entirely.
+        """
         rows, t = req.rows, req.seq_len
         # admission guaranteed t + max_new <= layout.tokens, so every
         # position this request will ever write is covered by its table
-        req.tables = np.stack([
-            self.cache.allocate((req.rid, r), t + req.max_new_tokens)
-            for r in range(rows)])
+        total = t + req.max_new_tokens
+        limit = None
+        row_keys: List[Optional[List[bytes]]] = [None] * rows
+        if self.prefix_enabled and rows > 1:
+            # lockstep rows share one pos_next: cap every row at the
+            # weakest row's match so no row re-writes shared history
+            # (keys hashed once here, reused by allocate_prefix below)
+            row_keys = [block_keys(req.tokens[r], self.cache.block_size)
+                        for r in range(rows)]
+            limit = min(len(self.cache.prefix.lookup(k)) for k in row_keys)
+        tabs, matched = [], []
+        for r in range(rows):
+            if self.prefix_enabled:
+                row_tab, m_tok, _ = self.cache.allocate_prefix(
+                    (req.rid, r), total, req.tokens[r], limit=limit,
+                    keys=row_keys[r])
+            else:
+                row_tab, m_tok = self.cache.allocate((req.rid, r), total), 0
+            tabs.append(row_tab)
+            matched.append(m_tok)
+        req.tables = np.stack(tabs)
+        req.pos_next = min(matched)
+        if req.pos_next:
+            self.stats["prefix_hits"] += rows
+            self.stats["prefix_tokens_reused"] += req.pos_next * rows
         for i in range(self.max_batch):
             if len(req.slots) == rows:
                 break
@@ -677,6 +751,36 @@ class PagedBatcher:
                 self._slots[i] = (req, len(req.slots))
                 req.slots.append(i)
         self._active.append(req)
+
+    def _cow_writes(self, req: _PagedReq, adv: int) -> None:
+        """Copy-on-write any SHARED block the coming write range
+        ``[pos_next, pos_next + adv)`` touches: a write must never mutate
+        a block other requests (or the prefix index) still read.  The
+        organic case is the cache-hit boundary landing inside a
+        fully-matched block (prompt length a multiple of the block
+        size); the scan itself is one refcount probe per touched block.
+        """
+        if not self.prefix_enabled or adv <= 0 or req.tables is None:
+            return
+        bs = self.cache.block_size
+        lo, hi = req.pos_next // bs, (req.pos_next + adv - 1) // bs
+        for r in range(req.rows):
+            for idx in range(lo, hi + 1):
+                pair = self.cache.ensure_private((req.rid, r), idx)
+                if pair is not None:
+                    src, dst = pair
+                    self.cache.pool = self._copy_block(
+                        self.cache.pool, np.int32(src), np.int32(dst))
+                    req.tables[r, idx] = dst
+                    self.stats["cow_copies"] += 1
+
+    def _register_prefix(self, req: _PagedReq) -> None:
+        """Index the request's fully-written full prompt blocks, so later
+        prompts (and concurrent identical ones) can share them."""
+        if self.prefix_enabled:
+            for r in range(req.rows):
+                self.cache.register_progress((req.rid, r), req.tokens[r],
+                                             req.pos_next)
 
     # -- blocking chunked prefill (fused_prefill=False baseline) ------------
     def _prefill_blocking(self, req: _PagedReq) -> None:
@@ -686,7 +790,6 @@ class PagedBatcher:
         self._install(req)
         rows, t = req.rows, req.seq_len
         c = self.prefill_chunk
-        tables_j = jnp.asarray(req.tables)
         logits = None
         while req.pos_next < t:
             if req.pos_next and req.expired():
@@ -695,6 +798,7 @@ class PagedBatcher:
                 self._retire(req)
                 return
             adv = min(c, t - req.pos_next)
+            self._cow_writes(req, adv)   # may rewrite req.tables entries
             toks = np.zeros((rows, c), np.int32)
             toks[:, :adv] = req.tokens[:, req.pos_next:req.pos_next + adv]
             pos = np.broadcast_to(
@@ -703,9 +807,11 @@ class PagedBatcher:
             last = np.full((rows,), adv - 1, np.int32)
             logits, self.cache.pool = self._step_fn(
                 self.engine.params, jnp.asarray(toks), self.cache.pool,
-                tables_j, jnp.asarray(pos), jnp.asarray(last))
+                jnp.asarray(req.tables), jnp.asarray(pos),
+                jnp.asarray(last))
             self.stats["prefill_chunks"] += 1
             req.pos_next += adv
+            self._register_prefix(req)
         req.next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
         if req.max_new_tokens <= 0 or req.expired():
             self._retire(req)
@@ -765,6 +871,25 @@ class PagedBatcher:
             cap = c
         advances = {req.rid: min(cap, req.seq_len - req.pos_next)
                     for req in prefilling}
+        # copy-on-write before the shared step: a row about to write into
+        # a block the prefix cache (or another request) still reads gets
+        # a private copy first.  A COW that cannot get a block even after
+        # LRU eviction fails only ITS request, never the batch.
+        for req, adv in ((r, advances[r.rid]) for r in list(prefilling)):
+            try:
+                self._cow_writes(req, adv)
+            except CacheOOM as e:
+                self._retire(req, exc=e)
+                prefilling.remove(req)
+        for req in list(decoding):
+            try:
+                self._cow_writes(req, 1)
+            except CacheOOM as e:
+                self._retire(req, exc=e)
+                decoding.remove(req)
+        if not prefilling and not decoding:
+            return
+        n_decode = sum(len(r.slots) for r in decoding)
         max_ctx = max([req.pos_next + advances[req.rid]
                        for req in prefilling]
                       + [req.pos_next + 1 for req in decoding])
@@ -808,6 +933,7 @@ class PagedBatcher:
             self._advance_decode(req, logits)
         for req in list(prefilling):
             req.pos_next += advances[req.rid]
+            self._register_prefix(req)
             if not req.prefilling:
                 # prompt fully written: the chunk's last valid logits are
                 # the first generated token (same as blocking prefill)
@@ -818,6 +944,13 @@ class PagedBatcher:
     # -- decode -------------------------------------------------------------
     def _decode_step(self) -> None:
         b = self.max_batch
+        for req in list(self._active):
+            try:
+                self._cow_writes(req, 1)  # decode writes never hit shared
+            except CacheOOM as e:         # blocks (robustness backstop)
+                self._retire(req, exc=e)
+        if not self._active:
+            return
         max_ctx = max(req.pos_next + 1 for req in self._active)
         m_used = self._table_width(max_ctx)
         toks = np.zeros((b, 1), np.int32)

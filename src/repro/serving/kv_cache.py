@@ -28,16 +28,35 @@ Block 0 is reserved as the *null block*: padding entries in block tables
 point at it, and masked/inactive batch rows write their garbage there.  It
 is never handed to a request, so stale writes can never corrupt live data.
 
-The :class:`BlockAllocator` is a plain free-list (LIFO for locality) with
-ownership tracking: double-assignment is a hard invariant (checked on
-every alloc), and releasing an owner returns *all* of its blocks — the
-property the deadline-shedding path relies on (a shed request must never
-leak pool capacity).
+The :class:`BlockAllocator` is a refcounted free-list (LIFO for locality):
+``alloc`` hands out fresh blocks at refcount 1, ``share`` lets another
+owner take a reference to a resident block, and a block returns to the
+free list exactly when its refcount reaches 0 — never earlier (a shared
+block must survive its first owner), never later (capacity conservation).
+Handing out a block that still has references is a hard invariant
+(checked on every alloc), and releasing an owner drops *all* of its
+references — the property the deadline-shedding path relies on (a shed
+request must never leak pool capacity).
+
+Refcounts are what make **prefix caching** nearly free on this layout:
+because blocks are fixed-size, a prompt's content hash is a hash of whole
+blocks (no variable-length boundary scan), so :class:`PrefixCache` keys
+``(parent_block_hash, block_token_ids)`` chains to physical block ids.  A
+new request's prompt is matched block-by-block against already-resident
+prefixes; matched blocks are *shared* (a refcount, not a copy), the
+partially-filled tail block is never shared, and a write into a block
+that still has other readers triggers copy-on-write allocation of a
+private block.  Finished requests' indexed blocks stay resident in an LRU
+(the cache holds one reference of its own) so a hot system prompt
+survives between requests; eviction reclaims the least-recently-used
+unpinned block when the pool runs short.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, Hashable, List, Optional
+import hashlib
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -64,13 +83,14 @@ def aligned_block_size(block_size: int, head_dim: int, dtype) -> int:
 
 
 class BlockAllocator:
-    """Free-list allocator over ``num_blocks`` fixed-size blocks.
+    """Refcounted free-list allocator over ``num_blocks`` fixed-size blocks.
 
     Block 0 is reserved (the null block) and never allocated.  Blocks are
     handed out LIFO so recently-freed (likely still-resident) blocks are
-    reused first.  Every block tracks its owner; handing out a block that
-    already has one raises — that invariant is what the property tests
-    hammer on.
+    reused first.  Every live block carries a reference count; handing
+    out a block that still has references raises — that invariant is what
+    the property tests hammer on.  A block rejoins the free list exactly
+    when its last reference is dropped.
     """
 
     def __init__(self, num_blocks: int, *, reserved: int = 1):
@@ -79,7 +99,7 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self.reserved = reserved
         self._free: List[int] = list(range(num_blocks - 1, reserved - 1, -1))
-        self._owner: Dict[int, Hashable] = {}
+        self._refs: Dict[int, int] = {}
         self._owned: Dict[Hashable, List[int]] = {}
 
     @property
@@ -93,8 +113,15 @@ class BlockAllocator:
     def blocks_of(self, owner: Hashable) -> List[int]:
         return list(self._owned.get(owner, ()))
 
+    def refcount(self, block: int) -> int:
+        """Outstanding references to ``block`` (0 = free)."""
+        return self._refs.get(block, 0)
+
+    def is_free(self, block: int) -> bool:
+        return block in self._free
+
     def alloc(self, n: int, owner: Hashable) -> List[int]:
-        """Take ``n`` blocks for ``owner``; all-or-nothing."""
+        """Take ``n`` fresh blocks (refcount 1) for ``owner``; all-or-nothing."""
         if n < 0:
             raise ValueError(f"negative block count {n}")
         if n > len(self._free):
@@ -102,21 +129,62 @@ class BlockAllocator:
                 f"{n} blocks requested, {len(self._free)} free "
                 f"(capacity {self.capacity})")
         out = [self._free.pop() for _ in range(n)]
+        bad = next((b for b in out if self._refs.get(b, 0)), None)
+        if bad is not None:  # the invariant; corrupt free list if hit
+            # all-or-nothing holds even on the invariant path: restore the
+            # popped blocks (original order) before raising, so detecting
+            # a corrupt free list doesn't ALSO leak pool capacity or leave
+            # partially-recorded ownership behind
+            self._free.extend(reversed(out))
+            raise AssertionError(
+                f"block {bad} double-assigned "
+                f"({self._refs[bad]} refs outstanding -> {owner!r})")
         for b in out:
-            if b in self._owner:  # the invariant; corrupt free list if hit
-                raise AssertionError(f"block {b} double-assigned "
-                                     f"({self._owner[b]!r} -> {owner!r})")
-            self._owner[b] = owner
+            self._refs[b] = 1
         self._owned.setdefault(owner, []).extend(out)
         return out
 
+    def share(self, block: int, owner: Hashable) -> None:
+        """Take one additional reference to a live block for ``owner``."""
+        if self._refs.get(block, 0) <= 0:
+            raise ValueError(f"block {block} is not allocated; cannot share")
+        self._refs[block] += 1
+        self._owned.setdefault(owner, []).append(block)
+
+    def drop(self, owner: Hashable, block: int) -> bool:
+        """Release ONE reference of ``owner`` on ``block``.
+
+        Returns True when that was the last reference (the block is back
+        on the free list).  The copy-on-write and LRU-eviction paths
+        release single blocks; requests release wholesale via free().
+        """
+        blocks = self._owned.get(owner)
+        if blocks is None or block not in blocks:
+            raise ValueError(f"{owner!r} holds no reference to block {block}")
+        blocks.remove(block)
+        if not blocks:
+            del self._owned[owner]
+        return self._unref(block)
+
+    def _unref(self, block: int) -> bool:
+        left = self._refs[block] - 1
+        if left:
+            self._refs[block] = left
+            return False
+        del self._refs[block]  # refcount 0 <=> on the free list
+        self._free.append(block)
+        return True
+
     def free(self, owner: Hashable) -> int:
-        """Return ALL blocks of ``owner`` to the free list."""
+        """Drop EVERY reference held by ``owner`` (finish OR shed path).
+
+        Only blocks whose refcount hits 0 return to the free list; blocks
+        still shared with other requests (or pinned by the prefix cache)
+        stay resident.  Returns the number of references released.
+        """
         blocks = self._owned.pop(owner, [])
-        for b in blocks:
-            del self._owner[b]
-        # LIFO reuse: most recently used first
-        self._free.extend(reversed(blocks))
+        for b in reversed(blocks):   # LIFO reuse: most recently used first
+            self._unref(b)
         return len(blocks)
 
 
@@ -143,6 +211,149 @@ class PagedLayout:
         return self.blocks_per_seq * self.block_size
 
 
+def block_keys(tokens, block_size: int) -> List[bytes]:
+    """Content-hash chain over the FULL blocks of a token row.
+
+    ``key_i = H(key_{i-1} || tokens_of_block_i)``: a block's key commits
+    to the entire prefix ending at its last token, so equal keys <=>
+    equal (position, content) prefixes and matching is one flat dict
+    probe per block.  Fixed-size blocks are what keep this branchless:
+    the hash is a hash of whole blocks, never a variable-length boundary
+    scan.  Only full blocks get keys — the partial tail is never shared.
+    """
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+    keys: List[bytes] = []
+    parent = b""
+    for i in range(len(toks) // block_size):
+        parent = hashlib.blake2b(
+            parent + toks[i * block_size:(i + 1) * block_size].tobytes(),
+            digest_size=16).digest()
+        keys.append(parent)
+    return keys
+
+
+class PrefixCache:
+    """Content-addressed index of full KV blocks + LRU retention.
+
+    Maps chain keys (:func:`block_keys`) to resident physical blocks.
+    The cache holds one reference of its own on every indexed block, so
+    a finished request's prefix blocks stay out of the free list
+    (refcount 1, "cached but unreferenced") until evicted — a hot system
+    prompt survives between requests.  Eviction drops the
+    least-recently-used indexed block whose only reference is the
+    cache's; blocks pinned by live requests are skipped.
+    """
+
+    _OWNER = "<prefix-lru>"
+
+    def __init__(self, allocator: BlockAllocator, *, max_blocks: int = 0):
+        self.allocator = allocator
+        self.max_blocks = max(0, int(max_blocks))  # 0 = pool-bounded
+        self._index: Dict[bytes, int] = {}
+        self._key_of: Dict[int, bytes] = {}
+        self._parent: Dict[bytes, bytes] = {}      # chain linkage
+        self._children: Dict[bytes, int] = {}      # indexed children per key
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self.hits = 0        # blocks handed out via acquire()
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    @property
+    def reclaimable(self) -> int:
+        """Indexed blocks no live request references (evictable now)."""
+        return sum(1 for b in self._lru if self.allocator.refcount(b) == 1)
+
+    def lookup(self, keys: Sequence[bytes]) -> List[int]:
+        """Longest indexed prefix of ``keys`` -> physical block ids."""
+        out: List[int] = []
+        for k in keys:
+            b = self._index.get(k)
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    def acquire(self, blocks: Sequence[int], owner: Hashable) -> None:
+        """Reference matched blocks for ``owner`` and refresh recency."""
+        for b in blocks:
+            self.allocator.share(b, owner)
+            self._lru.move_to_end(b)
+        self.hits += len(blocks)
+
+    def register(self, key: bytes, block: int,
+                 parent: Optional[bytes] = None) -> bool:
+        """Index a fully-written block under its chain key.
+
+        First writer wins: if the key is already mapped (an identical
+        prompt raced ahead) or the block is already indexed, nothing
+        changes and the caller keeps its private copy.  ``parent`` is
+        the chain key of the preceding block (None at the chain head);
+        the linkage makes eviction leaf-first.
+        """
+        if key in self._index or block in self._key_of:
+            return False
+        self._index[key] = block
+        self._key_of[block] = key
+        if parent is not None:
+            self._parent[key] = parent
+            self._children[parent] = self._children.get(parent, 0) + 1
+        self.allocator.share(block, self._OWNER)
+        self._lru[block] = None
+        self._lru.move_to_end(block)
+        self.trim()
+        return True
+
+    def trim(self) -> int:
+        """Enforce ``max_blocks``: evict unpinned entries over the cap.
+        Called on register AND on request release — a block pinned by
+        its writer at registration time only becomes evictable once
+        that request drops its reference."""
+        if not self.max_blocks or len(self._lru) <= self.max_blocks:
+            return 0
+        return self.evict(len(self._lru) - self.max_blocks)
+
+    def evict(self, n: int) -> int:
+        """Drop up to ``n`` unpinned blocks, LRU-ordered LEAF-first.
+
+        Only blocks with no indexed child are candidates: lookup() walks
+        chains from the head, so evicting a chain-head block would leave
+        every retained descendant permanently unmatchable dead weight.
+        Leaf-first eviction trims chains from the tail and keeps the
+        matchable prefix resident.  Returns the number freed.
+        """
+        done = 0
+        progress = True
+        while done < n and progress:   # evicting a leaf may expose its
+            progress = False           # parent as the next candidate
+            for b in list(self._lru):
+                if done >= n:
+                    break
+                if self.allocator.refcount(b) != 1:
+                    continue  # pinned by a live request; not evictable
+                key = self._key_of[b]
+                if self._children.get(key, 0):
+                    continue  # interior chain block; evict its tail first
+                del self._index[key]
+                del self._key_of[b]
+                del self._lru[b]
+                self._children.pop(key, None)
+                parent = self._parent.pop(key, None)
+                if parent is not None:
+                    left = self._children[parent] - 1
+                    if left:
+                        self._children[parent] = left
+                    else:
+                        del self._children[parent]
+                self.allocator.drop(self._OWNER, b)
+                done += 1
+                progress = True
+        self.evictions += done
+        return done
+
+
 class PagedKVCache:
     """Device-resident block pool + per-request block tables.
 
@@ -155,7 +366,8 @@ class PagedKVCache:
 
     def __init__(self, *, num_layers: int, num_kv_heads: int, head_dim: int,
                  cache_len: int, block_size: int = 16, num_blocks: int = 0,
-                 max_concurrent: int = 8, dtype: str = "float32"):
+                 max_concurrent: int = 8, dtype: str = "float32",
+                 prefix_cache: bool = True, prefix_lru_blocks: int = 0):
         bs = aligned_block_size(block_size, head_dim, dtype)
         m = -(-cache_len // bs)
         if num_blocks <= 0:
@@ -163,7 +375,12 @@ class PagedKVCache:
         self.layout = PagedLayout(num_layers, num_blocks, num_kv_heads, bs,
                                   head_dim, dtype, m)
         self.allocator = BlockAllocator(num_blocks)
+        self.prefix: Optional[PrefixCache] = \
+            PrefixCache(self.allocator, max_blocks=prefix_lru_blocks) \
+            if prefix_cache else None
         self._tables: Dict[Hashable, List[int]] = {}
+        self._keys: Dict[Hashable, List[bytes]] = {}       # per-owner chain
+        self._registered: Dict[Hashable, int] = {}         # blocks indexed
         self._pool = None   # device buffers materialize lazily (or are
         # injected by the engine, whose model owns the pool layout)
         assert self.layout.block_bytes % _ALIGN == 0
@@ -202,24 +419,155 @@ class PagedKVCache:
     def num_free_blocks(self) -> int:
         return self.allocator.num_free
 
+    @property
+    def reclaimable(self) -> int:
+        """Cached-but-unreferenced blocks an allocation could evict."""
+        return self.prefix.reclaimable if self.prefix is not None else 0
+
     def blocks_needed(self, num_tokens: int) -> int:
-        return min(-(-num_tokens // self.block_size), self.blocks_per_seq)
+        """Blocks covering ``num_tokens`` logical positions.
+
+        Raises :class:`ValueError` when the request can never fit one
+        block-table row — the old ``min(...)`` clamp silently truncated
+        the table, so a request longer than ``cache_len`` was accepted
+        and its later tokens would have aliased the early blocks.
+        """
+        n = -(-num_tokens // self.block_size)
+        if n > self.blocks_per_seq:
+            raise ValueError(
+                f"{num_tokens} tokens need {n} blocks; a table row holds "
+                f"{self.blocks_per_seq} (cache_len {self.layout.tokens})")
+        return n
 
     def can_allocate(self, num_tokens: int) -> bool:
-        return self.blocks_needed(num_tokens) <= self.allocator.num_free
+        try:
+            need = self.blocks_needed(num_tokens)
+        except ValueError:  # oversized: reject, never truncate
+            return False
+        return need <= self.allocator.num_free + self.reclaimable
+
+    def _reserve(self, n: int, owner: Hashable) -> List[int]:
+        """alloc() with LRU pressure-relief: when the free list is short,
+        evict cached-but-unreferenced prefix blocks before giving up —
+        a CacheOOM sheds a request; a cold cache entry is always the
+        cheaper loss.  A shortfall eviction can't cover is refused
+        UP FRONT: flushing the warm cache for an allocation that raises
+        anyway would cost every future hit and buy nothing."""
+        short = n - self.allocator.num_free
+        if short > 0 and self.prefix is not None:
+            if short > self.prefix.reclaimable:
+                raise CacheOOM(
+                    f"{n} blocks requested, {self.allocator.num_free} free "
+                    f"+ {self.prefix.reclaimable} evictable "
+                    f"(capacity {self.allocator.capacity})")
+            self.prefix.evict(short)
+        return self.allocator.alloc(n, owner)
 
     def allocate(self, owner: Hashable, num_tokens: int) -> np.ndarray:
         """Reserve blocks covering ``num_tokens`` logical positions.
 
         Returns the padded ``[M]`` int32 block-table row (padding entries
         point at the null block).  All-or-nothing: raises :class:`CacheOOM`
-        without side effects if the pool is short.
+        without side effects if the pool is short (after evicting idle
+        prefix-cache blocks), :class:`ValueError` if the request can never
+        fit a table row.
         """
         if owner in self._tables:
             raise ValueError(f"owner {owner!r} already holds blocks")
-        blocks = self.allocator.alloc(self.blocks_needed(num_tokens), owner)
+        blocks = self._reserve(self.blocks_needed(num_tokens), owner)
         self._tables[owner] = blocks
         return self.table_row(owner)
+
+    # -- prefix caching ------------------------------------------------------
+    def match_prefix(self, tokens) -> int:
+        """Longest indexed prefix of ``tokens``, in blocks (lookup only)."""
+        if self.prefix is None:
+            return 0
+        return len(self.prefix.lookup(block_keys(tokens, self.block_size)))
+
+    def allocate_prefix(self, owner: Hashable, num_tokens: int, tokens, *,
+                        limit: Optional[int] = None,
+                        keys: Optional[List[bytes]] = None
+                        ) -> Tuple[np.ndarray, int, int]:
+        """:meth:`allocate`, but leading table entries may be SHARED.
+
+        The row's prompt is matched block-by-block against the prefix
+        index; matched (full) blocks are referenced in place and private
+        blocks are allocated only for the remainder.  Returns
+        ``(table_row, matched_tokens, shared_blocks)``.
+
+        ``matched_tokens`` is clamped to ``len(tokens) - 1`` so at least
+        one prompt token always remains to process — the step that
+        produces the first generated logits.  When the clamp lands that
+        position inside a fully-matched block (prompt length a multiple
+        of the block size), the write there later copy-on-writes via
+        :meth:`ensure_private`.  ``limit`` caps the matched blocks (the
+        engine aligns multi-row requests on their weakest row) and
+        ``keys`` passes a precomputed :func:`block_keys` chain so callers
+        that already hashed the prompt don't hash it twice.
+        All-or-nothing, like allocate().
+        """
+        if owner in self._tables:
+            raise ValueError(f"owner {owner!r} already holds blocks")
+        total = self.blocks_needed(num_tokens)
+        shared: List[int] = []
+        if self.prefix is None:
+            keys = []
+        else:
+            if keys is None:
+                keys = block_keys(tokens, self.block_size)
+            shared = self.prefix.lookup(keys)
+            if limit is not None:
+                shared = shared[:limit]
+            # take the references BEFORE any eviction below can run, so a
+            # private-block shortfall never reclaims our own match
+            self.prefix.acquire(shared, owner)
+        try:
+            private = self._reserve(total - len(shared), owner)
+        except CacheOOM:
+            for b in reversed(shared):
+                self.allocator.drop(owner, b)
+            raise
+        self._tables[owner] = shared + private
+        self._keys[owner] = keys
+        self._registered[owner] = len(shared)  # matched keys already indexed
+        t = int(np.asarray(tokens).reshape(-1).shape[0])
+        matched = min(len(shared) * self.block_size, max(t - 1, 0))
+        return self.table_row(owner), matched, len(shared)
+
+    def register_progress(self, owner: Hashable, tokens, written: int) -> int:
+        """Index ``owner``'s full prompt blocks once their content is
+        resident (``written`` = prompt tokens written so far).  Called by
+        the engine after each prefill advance; returns #new index entries.
+        """
+        if self.prefix is None or owner not in self._tables:
+            return 0
+        keys = self._keys.get(owner, ())
+        done = self._registered.get(owner, 0)
+        upto = min(written // self.block_size, len(keys))
+        blocks = self._tables[owner]
+        new = 0
+        for i in range(done, upto):
+            new += bool(self.prefix.register(
+                keys[i], blocks[i], keys[i - 1] if i else None))
+        if upto > done:
+            self._registered[owner] = upto
+        return new
+
+    def ensure_private(self, owner: Hashable, idx: int
+                       ) -> Optional[Tuple[int, int]]:
+        """Copy-on-write hook: if ``owner``'s table entry ``idx`` is
+        shared (refcount > 1), swap in a fresh private block and return
+        ``(old, new)`` so the engine can copy the pool contents before
+        writing.  None when the block is already exclusively owned."""
+        blocks = self._tables[owner]
+        old = blocks[idx]
+        if self.allocator.refcount(old) <= 1:
+            return None
+        new = self._reserve(1, owner)[0]
+        self.allocator.drop(owner, old)
+        blocks[idx] = new
+        return old, new
 
     def table_row(self, owner: Hashable) -> np.ndarray:
         row = np.zeros(self.blocks_per_seq, np.int32)
@@ -228,6 +576,14 @@ class PagedKVCache:
         return row
 
     def release(self, owner: Hashable) -> int:
-        """Return every block of ``owner`` (finish OR shed path)."""
+        """Drop every reference of ``owner`` (finish OR shed path).
+
+        Blocks the prefix index retains (or other requests still share)
+        stay resident; everything else returns to the free list."""
         self._tables.pop(owner, None)
-        return self.allocator.free(owner)
+        self._keys.pop(owner, None)
+        self._registered.pop(owner, None)
+        n = self.allocator.free(owner)
+        if self.prefix is not None:
+            self.prefix.trim()   # cap now that this owner's pins are gone
+        return n

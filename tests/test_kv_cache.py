@@ -1,9 +1,10 @@
-"""Paged KV cache: allocator invariants (property-based) + layout rules."""
+"""Paged KV cache: allocator invariants (property-based) + layout rules +
+refcounted sharing / prefix-cache / copy-on-write bookkeeping."""
 import numpy as np
 import pytest
 
 from repro.serving.kv_cache import (BlockAllocator, CacheOOM, PagedKVCache,
-                                    aligned_block_size)
+                                    aligned_block_size, block_keys)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -69,6 +70,172 @@ def test_oom_is_all_or_nothing():
     c.allocate("b", 16)              # smaller request still fits
 
 
+def test_alloc_invariant_path_is_all_or_nothing():
+    """Regression: if the double-assign invariant fires mid-alloc, the
+    already-popped blocks must go back on the free list and no partial
+    ownership may be recorded — the old code leaked both."""
+    a = BlockAllocator(8)
+    held = a.alloc(2, "r1")
+    a._free.append(held[0])          # simulate free-list corruption
+    free_before = list(a._free)
+    with pytest.raises(AssertionError):
+        a.alloc(len(free_before), "victim")
+    assert a._free == free_before    # every popped block restored, in order
+    assert a.blocks_of("victim") == []
+    assert a.refcount(held[0]) == 1  # untouched beyond the corruption itself
+
+
+def test_blocks_needed_rejects_oversized_requests():
+    """Regression: blocks_needed used to clamp at blocks_per_seq, so a
+    request longer than cache_len got a silently-truncated table whose
+    later tokens would alias the early blocks."""
+    c = PagedKVCache(num_layers=1, num_kv_heads=1, head_dim=16,
+                     cache_len=64, block_size=16, num_blocks=8)
+    assert c.blocks_needed(64) == 4          # exactly full is fine
+    with pytest.raises(ValueError):
+        c.blocks_needed(65)
+    assert not c.can_allocate(65)            # reject, don't truncate
+    free_before = c.num_free_blocks
+    with pytest.raises(ValueError):
+        c.allocate("a", 100)
+    assert c.num_free_blocks == free_before  # nothing leaked
+
+
+# -- refcounted sharing -------------------------------------------------------
+
+def test_share_and_drop_refcounts():
+    a = BlockAllocator(6)
+    (b1, b2) = a.alloc(2, "r1")
+    a.share(b1, "r2")
+    assert a.refcount(b1) == 2 and a.refcount(b2) == 1
+    assert a.free("r1") == 2         # two references released...
+    assert a.refcount(b1) == 1       # ...but the shared block stays live
+    assert not a.is_free(b1) and a.is_free(b2)
+    assert a.drop("r2", b1)          # last reference -> free list
+    assert a.is_free(b1) and a.refcount(b1) == 0
+    assert a.num_free == a.capacity
+    with pytest.raises(ValueError):
+        a.drop("r2", b1)             # no reference held any more
+    with pytest.raises(ValueError):
+        a.share(b1, "r3")            # free blocks cannot be shared
+
+
+# -- prefix cache: content-hash chain, LRU retention, copy-on-write -----------
+
+def _cache(**kw):
+    kw.setdefault("num_blocks", 12)
+    return PagedKVCache(num_layers=1, num_kv_heads=1, head_dim=16,
+                        cache_len=128, block_size=16, **kw)
+
+
+def test_block_keys_chain_position_dependence():
+    toks = np.arange(48, dtype=np.int32)
+    keys = block_keys(toks, 16)
+    assert len(keys) == 3            # only FULL blocks get keys
+    assert len(block_keys(toks[:47], 16)) == 2
+    # same content at a different chain position -> different key
+    swapped = np.concatenate([toks[16:32], toks[:16], toks[32:48]])
+    assert block_keys(swapped, 16)[2] != keys[2]
+    assert block_keys(toks, 16) == keys  # deterministic
+
+
+def test_prefix_match_register_release_reuse():
+    c = _cache()
+    toks = (np.arange(40, dtype=np.int32) * 7) % 13
+    row, matched, shared = c.allocate_prefix("a", 48, toks)
+    assert (matched, shared) == (0, 0)   # cold
+    assert c.match_prefix(toks) == 0
+    c.register_progress("a", toks, 40)   # 2 full blocks written + indexed
+    assert c.match_prefix(toks) == 2
+    c.release("a")
+    # cached-but-unreferenced: out of the free list, but reclaimable
+    assert c.reclaimable == 2
+    assert c.num_free_blocks + c.reclaimable == c.allocator.capacity
+    row2, matched2, shared2 = c.allocate_prefix("b", 48, toks)
+    assert (matched2, shared2) == (32, 2)
+    assert row2[0] == row[0] and row2[1] == row[1]   # same physical blocks
+    assert c.allocator.refcount(row2[0]) == 2        # cache + request
+    assert c.allocator.refcount(int(row2[2])) == 1   # tail is never shared
+    c.release("b")
+
+
+def test_prefix_match_clamps_to_leave_one_token():
+    """A fully-matched block-aligned prompt still leaves >= 1 token to
+    process (the step producing the first logits), and the write there
+    lands in a shared block -> ensure_private copy-on-writes it."""
+    c = _cache()
+    toks = np.arange(32, dtype=np.int32)
+    c.allocate_prefix("a", 40, toks)
+    c.register_progress("a", toks, 32)
+    c.release("a")
+    row, matched, shared = c.allocate_prefix("b", 40, toks)
+    assert (matched, shared) == (31, 2)   # not 32: last token re-processed
+    pair = c.ensure_private("b", 1)       # boundary block is shared
+    assert pair is not None
+    old, new = pair
+    assert old == row[1] and new != old
+    assert c.table_row("b")[1] == new
+    assert c.allocator.refcount(old) == 1     # cache keeps the original
+    assert c.allocator.refcount(new) == 1     # request owns the copy
+    assert c.ensure_private("b", 1) is None   # already private
+    assert c.ensure_private("b", 2) is None   # tail was never shared
+    c.release("b")
+
+
+def test_prefix_lru_eviction_order_and_pressure():
+    """Eviction frees least-recently-USED entries first, skips blocks
+    live requests still reference, and runs automatically when an
+    allocation would otherwise CacheOOM."""
+    c = _cache(num_blocks=8)         # capacity 7
+    ta = np.arange(32, dtype=np.int32)
+    tb = np.arange(32, 64, dtype=np.int32)
+    for owner, toks in (("a", ta), ("b", tb)):
+        c.allocate_prefix(owner, 32, toks)
+        c.register_progress(owner, toks, 32)
+        c.release(owner)
+    assert c.reclaimable == 4 and c.num_free_blocks == 3
+    c.allocate_prefix("a2", 32, ta)  # touch A: now B is least-recent
+    # 5 fresh blocks forces eviction; A's are pinned, so B's two go first
+    c.allocate("big", 80)
+    assert c.match_prefix(tb) == 0   # B evicted
+    assert c.match_prefix(ta) == 2   # A survived (live reference)
+    assert c.prefix.evictions == 2
+    c.release("a2")
+    c.release("big")
+    # unsatisfiable even after eviction still raises, all-or-nothing
+    c.allocate("full", 96)           # 6 blocks; 1 free + A's 2 evictable
+    with pytest.raises(CacheOOM):
+        c.allocate("more", 48)
+    c.release("full")
+
+
+def test_prefix_lru_capacity_knob_keeps_matchable_head():
+    c = _cache(prefix_lru_blocks=2)
+    toks = np.arange(64, dtype=np.int32)
+    c.allocate_prefix("a", 64, toks)
+    c.register_progress("a", toks, 64)   # 4 full blocks -> cap 2 retained
+    c.release("a")
+    assert len(c.prefix) == 2
+    assert c.reclaimable == 2
+    # eviction is leaf-first: the chain is trimmed from the TAIL, so the
+    # retained blocks are the head — still matchable as a partial hit
+    # (dropping the head instead would leave unmatchable dead weight)
+    assert c.match_prefix(toks) == 2
+    assert c.match_prefix(toks[:32]) == 2
+
+
+def test_prefix_disabled_is_inert():
+    c = _cache(prefix_cache=False)
+    toks = np.arange(48, dtype=np.int32)
+    row, matched, shared = c.allocate_prefix("a", 48, toks)
+    assert (matched, shared) == (0, 0)
+    assert c.register_progress("a", toks, 48) == 0
+    c.release("a")
+    assert c.reclaimable == 0
+    assert c.num_free_blocks == c.allocator.capacity
+    assert c.match_prefix(toks) == 0
+
+
 # -- property test: alloc/free/evict never double-assigns ---------------------
 
 if HAS_HYPOTHESIS:
@@ -114,7 +281,90 @@ if HAS_HYPOTHESIS:
         for owner in list(model):
             a.free(owner)
         assert a.num_free == a.capacity
+    _rc_ops = st.lists(
+        st.tuples(st.sampled_from(["alloc", "share", "drop", "free", "cow"]),
+                  st.integers(0, 5), st.integers(0, 7)),
+        max_size=80)
+
+    @settings(max_examples=200, deadline=None)
+    @given(_rc_ops)
+    def test_refcounted_allocator_invariants(ops):
+        """Random share/release/COW interleavings: refcounts never go
+        negative, a block is free iff its refcount is 0, and pool
+        capacity is conserved exactly at every step."""
+        a = BlockAllocator(12)
+        refs = {}                      # block -> refcount, the oracle
+        owned = {}                     # owner -> blocks (with multiplicity)
+        for op, x, y in ops:
+            owner = f"r{y}"
+            if op == "alloc":
+                try:
+                    got = a.alloc(x, owner)
+                except CacheOOM:
+                    assert x > a.num_free
+                    continue
+                for b in got:
+                    assert refs.get(b, 0) == 0   # fresh blocks only
+                    refs[b] = 1
+                owned.setdefault(owner, []).extend(got)
+            elif op == "share":
+                live = sorted(refs)
+                if not live:
+                    continue
+                b = live[x % len(live)]
+                a.share(b, owner)
+                refs[b] += 1
+                owned.setdefault(owner, []).append(b)
+            elif op == "drop":
+                blocks = owned.get(owner)
+                if not blocks:
+                    continue
+                b = blocks[x % len(blocks)]
+                went_free = a.drop(owner, b)
+                blocks.remove(b)
+                refs[b] -= 1
+                assert refs[b] >= 0
+                assert went_free == (refs[b] == 0)
+                if refs[b] == 0:
+                    del refs[b]
+            elif op == "cow":
+                # the engine's copy-on-write: a private replacement block
+                # is taken, then the shared original's reference dropped
+                shared = [b for b in owned.get(owner, ()) if refs[b] > 1]
+                if not shared:
+                    continue
+                b = shared[x % len(shared)]
+                try:
+                    new = a.alloc(1, owner)[0]
+                except CacheOOM:
+                    continue
+                refs[new] = 1
+                owned[owner].append(new)
+                a.drop(owner, b)
+                owned[owner].remove(b)
+                refs[b] -= 1
+                assert refs[b] >= 1   # someone else still reads it
+            else:  # free: release the owner wholesale (retire/shed path)
+                blocks = owned.pop(owner, [])
+                assert a.free(owner) == len(blocks)
+                for b in blocks:
+                    refs[b] -= 1
+                    assert refs[b] >= 0
+                    if refs[b] == 0:
+                        del refs[b]
+            # global invariants after EVERY op
+            assert a.num_free == a.capacity - len(refs)   # conservation
+            for b, rc in refs.items():
+                assert a.refcount(b) == rc and rc > 0
+                assert not a.is_free(b)                   # free iff rc == 0
+        for owner in list(owned):
+            a.free(owner)
+        assert a.num_free == a.capacity
 else:  # pragma: no cover - CI installs hypothesis
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_allocator_never_double_assigns():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_refcounted_allocator_invariants():
         pass

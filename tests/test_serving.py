@@ -6,8 +6,8 @@ import uuid
 from repro.configs import get_config, reduced_config
 from repro.core import wire
 from repro.core.rpc import Channel, Deadline, RpcError, Status, connected_pair
-from repro.serving import (Engine, PagedBatcher, ServeConfig, ShedError,
-                           build_server)
+from repro.serving import (ContinuousBatcher, Engine, PagedBatcher,
+                           ServeConfig, ShedError, build_server)
 from repro.serving.service import (GenerateRequest, GenerateResponse,
                                    InferenceService, ScoreResponse,
                                    TokenBatch, TokenChunk, TokenizeRequest)
@@ -216,13 +216,15 @@ def test_paged_budget_overflow_falls_back_dense(paged):
     out = batcher.generate(p, max_new_tokens=8)
     assert batcher.stats["dense_fallbacks"] == before + 1
     assert np.array_equal(out, engine.generate(p, max_new_tokens=8))
-    # pool untouched: everything still free afterwards
-    assert batcher.cache.num_free_blocks == batcher.cache.allocator.capacity
+    # pool untouched: everything free or idle-cached (reclaimable blocks
+    # are prefix-cache residue from earlier tests in this module)
+    assert batcher.cache.num_free_blocks + batcher.cache.reclaimable \
+        == batcher.cache.allocator.capacity
 
 
 def test_paged_blocks_are_returned(paged):
-    """After a workload drains, every block is back in the pool —
-    including those of shed requests."""
+    """After a workload drains, every block is back in the pool (free or
+    idle-cached) — including those of shed requests."""
     cfg, engine, batcher = paged
     rng = np.random.default_rng(17)
     futs = [batcher.submit(
@@ -235,7 +237,8 @@ def test_paged_blocks_are_returned(paged):
         f.result(timeout=180)
     with pytest.raises(ShedError):
         futs[-1].result(timeout=30)
-    assert batcher.cache.num_free_blocks == batcher.cache.allocator.capacity
+    assert batcher.cache.num_free_blocks + batcher.cache.reclaimable \
+        == batcher.cache.allocator.capacity
 
 
 # -- fused prefill/decode scheduling ---------------------------------------
@@ -255,10 +258,13 @@ class _FlipDeadline:
 @pytest.fixture(scope="module")
 def fused(setup):
     """Small chunks + a step-token budget so a 40-token prompt takes many
-    fused steps — plenty of room to observe interleaving."""
+    fused steps — plenty of room to observe interleaving.  Prefix caching
+    is OFF: these tests count prefill chunks, and a cache hit would
+    (correctly) skip the very chunks they assert on."""
     cfg, engine, _ = setup
     eng = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=8,
-                                  prefill_chunk=4, max_step_tokens=5),
+                                  prefill_chunk=4, max_step_tokens=5,
+                                  prefix_cache=False),
                  params=engine.params)
     batcher = PagedBatcher(eng, max_batch=6)
     yield cfg, eng, batcher
@@ -403,6 +409,171 @@ def test_worker_errors_counted_not_swallowed(setup):
         # pool is clean: the failed request's blocks came back
         assert batcher.cache.num_free_blocks == \
             batcher.cache.allocator.capacity
+    finally:
+        batcher.close()
+
+
+class _CountedDeadline:
+    """Deterministic mid-flight deadline: live for the first N expiry
+    checks, expired afterwards — no wall-clock races."""
+
+    def __init__(self, live_checks: int):
+        self.remaining = live_checks
+
+    def expired(self) -> bool:
+        self.remaining -= 1
+        return self.remaining < 0
+
+    def cutoff_ns(self) -> int:
+        return 10 ** 18  # ordering key only; far future
+
+
+def test_dense_mixed_deadline_group_still_sheds(setup):
+    """Regression: a no-deadline request used to disable mid-flight
+    shedding for every deadline-bearing request batched with it (the
+    group deadline was only propagated when ALL members had one)."""
+    cfg, engine, _ = setup
+    batcher = ContinuousBatcher(engine, max_batch=4, window_s=0.25)
+    try:
+        p1 = _prompt(cfg, t=8, seed=2).astype(np.int32)
+        p2 = _prompt(cfg, t=8, seed=3).astype(np.int32)
+        f1 = batcher.submit(p1, max_new_tokens=16)   # no deadline
+        f2 = batcher.submit(p2, max_new_tokens=16,
+                            deadline=_CountedDeadline(6))
+        out2 = f2.result(timeout=180)
+        f1.result(timeout=180)
+        assert batcher.stats["batches"] == 1         # they really merged
+        assert out2.shape[1] < 16   # deadline cut the generation short
+    finally:
+        batcher.close()
+
+
+# -- prefix caching: refcounted copy-on-write KV block sharing --------------
+
+@pytest.fixture(scope="module")
+def prefixed(setup):
+    """Block size 16 on a 64-token cache: prompts below 16 tokens never
+    populate the index, so each test controls its own hits."""
+    cfg, engine, _ = setup
+    eng = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=8,
+                                  prefill_chunk=8), params=engine.params)
+    batcher = PagedBatcher(eng, max_batch=4)
+    yield cfg, eng, batcher
+    batcher.close()
+
+
+def test_prefix_hit_token_identical(prefixed):
+    """The acceptance invariant: a cache-hit generation is byte-for-byte
+    the cold-path (and dense-engine) generation."""
+    cfg, engine, batcher = prefixed
+    rng = np.random.default_rng(71)
+    p = rng.integers(0, cfg.vocab_size, (1, 37)).astype(np.int32)
+    ref = engine.generate(p, max_new_tokens=6)
+    cold = batcher.generate(p, max_new_tokens=6)
+    reused0 = batcher.stats["prefix_tokens_reused"]
+    assert np.array_equal(cold, ref)
+    warm = batcher.generate(p, max_new_tokens=6)
+    assert np.array_equal(warm, ref)
+    # 37 tokens = 2 full blocks: the hit skipped exactly their prefill
+    assert batcher.stats["prefix_tokens_reused"] - reused0 == 32
+    assert batcher.stats["prefix_hits"] >= 1
+
+
+def test_prefix_partial_hit_with_different_tail(prefixed):
+    """Only the common full-block prefix is shared; a divergent tail
+    must neither corrupt the donor nor change either output."""
+    cfg, engine, batcher = prefixed
+    rng = np.random.default_rng(73)
+    head = rng.integers(0, cfg.vocab_size, (1, 32)).astype(np.int32)
+    a = np.concatenate([head, rng.integers(0, cfg.vocab_size, (1, 9))
+                        .astype(np.int32)], axis=1)
+    b = np.concatenate([head, rng.integers(0, cfg.vocab_size, (1, 13))
+                        .astype(np.int32)], axis=1)
+    ref_a, ref_b = (engine.generate(x, max_new_tokens=6) for x in (a, b))
+    out_a = batcher.generate(a, max_new_tokens=6)
+    reused0 = batcher.stats["prefix_tokens_reused"]
+    out_b = batcher.generate(b, max_new_tokens=6)
+    assert np.array_equal(out_a, ref_a)
+    assert np.array_equal(out_b, ref_b)
+    assert batcher.stats["prefix_tokens_reused"] - reused0 == 32
+    # the donor's result is reproducible after the second request wrote
+    # its own divergent tail (shared blocks were never mutated)
+    assert np.array_equal(batcher.generate(a, max_new_tokens=6), ref_a)
+
+
+def test_prefix_block_aligned_prompt_copy_on_write(prefixed):
+    """A fully-matched, block-aligned prompt re-processes its final
+    token; that write lands in a shared block and must copy-on-write a
+    private replacement, not mutate the cached original."""
+    cfg, engine, batcher = prefixed
+    rng = np.random.default_rng(79)
+    p = rng.integers(0, cfg.vocab_size, (1, 32)).astype(np.int32)
+    ref = engine.generate(p, max_new_tokens=6)
+    assert np.array_equal(batcher.generate(p, max_new_tokens=6), ref)
+    cow0 = batcher.stats["cow_copies"]
+    assert np.array_equal(batcher.generate(p, max_new_tokens=6), ref)
+    assert batcher.stats["cow_copies"] == cow0 + 1
+    # and the cached copy is still intact for a third pass
+    assert np.array_equal(batcher.generate(p, max_new_tokens=6), ref)
+
+
+def test_prefix_concurrent_identical_prompts(prefixed):
+    """Requests sharing a prompt admitted together: later ones may share
+    blocks the first registered mid-flight; everyone's output matches."""
+    cfg, engine, batcher = prefixed
+    rng = np.random.default_rng(83)
+    p = rng.integers(0, cfg.vocab_size, (1, 40)).astype(np.int32)
+    ref = engine.generate(p, max_new_tokens=5)
+    futs = [batcher.submit(p, max_new_tokens=5) for _ in range(3)]
+    for f in futs:
+        assert np.array_equal(f.result(timeout=180), ref)
+    # all blocks accounted for: free or idle-cached, none leaked
+    assert batcher.cache.num_free_blocks + batcher.cache.reclaimable \
+        == batcher.cache.allocator.capacity
+
+
+def test_prefix_cache_disabled_no_sharing(setup):
+    cfg, engine, _ = setup
+    eng = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=8,
+                                  prefix_cache=False),
+                 params=engine.params)
+    batcher = PagedBatcher(eng, max_batch=2)
+    try:
+        rng = np.random.default_rng(89)
+        p = rng.integers(0, cfg.vocab_size, (1, 36)).astype(np.int32)
+        ref = engine.generate(p, max_new_tokens=5)
+        for _ in range(2):
+            assert np.array_equal(batcher.generate(p, max_new_tokens=5), ref)
+        assert batcher.stats["prefix_hits"] == 0
+        assert batcher.stats["prefix_tokens_reused"] == 0
+        assert batcher.cache.reclaimable == 0
+        assert batcher.cache.num_free_blocks \
+            == batcher.cache.allocator.capacity
+    finally:
+        batcher.close()
+
+
+def test_prefix_lru_eviction_under_pool_pressure(setup):
+    """A pool too small to hold cached prefixes AND a new request evicts
+    idle cache entries instead of shedding the request."""
+    cfg, engine, _ = setup
+    # capacity 4: a 40-token + 4-new request needs 3 blocks; after the
+    # first leaves its 2 prefix blocks idle-cached only 2 are free, so
+    # admitting the second must evict rather than shed
+    eng = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=8,
+                                  num_blocks=5), params=engine.params)
+    batcher = PagedBatcher(eng, max_batch=2)
+    try:
+        rng = np.random.default_rng(97)
+        pa = rng.integers(0, cfg.vocab_size, (1, 40)).astype(np.int32)
+        pb = rng.integers(0, cfg.vocab_size, (1, 40)).astype(np.int32)
+        ref_b = engine.generate(pb, max_new_tokens=4)
+        batcher.generate(pa, max_new_tokens=4)      # caches pa's 2 blocks
+        assert batcher.cache.reclaimable == 2
+        # pool: 7 usable, 2 idle-cached; pb needs 3 -> must evict
+        out_b = batcher.generate(pb, max_new_tokens=4)
+        assert np.array_equal(out_b, ref_b)
+        assert batcher.cache.prefix.evictions >= 1
     finally:
         batcher.close()
 
