@@ -6,7 +6,6 @@ framing overhead, future dispatch latency, and cursor-resume cost.
 """
 from __future__ import annotations
 
-import time
 
 from repro.core import types as T, wire
 from repro.core.rpc import Channel, Router, Server, connected_pair

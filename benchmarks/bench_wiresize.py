@@ -8,7 +8,6 @@ bf16-dominated data.
 from __future__ import annotations
 
 import msgpack
-import orjson
 import zstandard
 
 from repro.core import varint, wire

@@ -1,0 +1,237 @@
+"""CI perf gates over the quick-bench CSV.
+
+    python -m benchmarks.check_gates bench-quick.csv
+
+Replaces the inline ``python - <<EOF`` scripts that used to live in
+``.github/workflows/ci.yml``: the thresholds are a table in code (below),
+the checks are importable and unit-tested (tests/test_check_gates.py),
+and a failure exits 1 with a readable report instead of a bare
+AssertionError in workflow YAML.
+
+When ``$GITHUB_STEP_SUMMARY`` is set (always, inside GitHub Actions),
+the full quick-bench table and the gate results are also appended there
+as markdown — the perf trajectory is visible per-run without
+downloading the artifact.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import os
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+Rows = Dict[str, Tuple[float, str]]   # name -> (us_per_call, derived)
+
+# -- the threshold table ----------------------------------------------------
+# One entry per gate; the check functions below read ONLY from here, so a
+# deliberate re-baseline is a one-line diff with the history to show for it.
+THRESHOLDS = {
+    # device-side page decode must beat host parsing >= 2x at >= 4 KB
+    "serve_ingest.min_speedup": 2.0,
+    "serve_ingest.min_record_bytes": 4096,
+    # one mixed-length paged step must not lose to 4 dense batch-1 calls
+    "paged_step.max_ratio_vs_dense": 1.0,
+    # end-to-end mixed-length scheduling >= 2x the dense scheduler
+    "engine_mixed16.min_speedup": 2.0,
+    # in-flight decode stall during a long admission: fused steps must
+    # cut the blocking scheduler's stall at least in half
+    "mixed_admission.max_stall_ratio": 0.5,
+    # prefix-cached admission of a shared system prompt >= 2x cold
+    "shared_prefix.min_speedup": 2.0,
+    # speculative decode on repetitive traffic >= 1.3x the serial loop,
+    # and the drafter must actually land accepted tokens
+    "spec_decode.min_speedup": 1.3,
+}
+
+
+@dataclasses.dataclass
+class GateResult:
+    gate: str
+    ok: bool
+    detail: str
+
+
+def parse_rows(path: str) -> Rows:
+    """``name,us_per_call,derived`` CSV -> row dict.
+
+    ERROR rows may embed commas inside an exception repr, so everything
+    past the second field is rejoined as the derived column.  The header
+    and malformed lines are skipped, never fatal — a missing row is the
+    GATE's failure to report, with the gate's name attached.
+    """
+    rows: Rows = {}
+    with open(path, newline="") as f:
+        for row in csv.reader(f):
+            if len(row) < 3 or row[0] == "name":
+                continue
+            try:
+                us = float(row[1])
+            except ValueError:
+                continue
+            rows[row[0]] = (us, ",".join(row[2:]))
+    return rows
+
+
+def _derived_num(derived: str, key: str) -> Optional[float]:
+    m = re.search(rf"{re.escape(key)}=([\d.]+)", derived)
+    return float(m.group(1)) if m else None
+
+
+def _missing(gate: str, name: str) -> GateResult:
+    return GateResult(gate, False, f"row {name!r} missing from bench CSV")
+
+
+def _check_serve_ingest(rows: Rows) -> List[GateResult]:
+    gate = "serve_ingest device decode"
+    min_bytes = THRESHOLDS["serve_ingest.min_record_bytes"]
+    need = THRESHOLDS["serve_ingest.min_speedup"]
+    found = []
+    for name, (_, derived) in rows.items():
+        m = re.match(r"serve_ingest\.device_decode\.(\d+)B$", name)
+        if m and int(m.group(1)) >= min_bytes:
+            sp = _derived_num(derived, "speedup")
+            if sp is None:
+                return [GateResult(gate, False,
+                                   f"{name}: no speedup= in derived column")]
+            found.append((name, sp))
+    if not found:
+        return [_missing(gate, f"serve_ingest.device_decode.>={min_bytes}B")]
+    return [GateResult(gate, sp >= need,
+                       f"{name}: {sp:.2f}x host parse (need >= {need}x)")
+            for name, sp in found]
+
+
+def _check_paged_step(rows: Rows) -> List[GateResult]:
+    gate = "paged decode step vs dense"
+    step = rows.get("paged_attention.decode_step.b4.paged")
+    dense = rows.get("paged_attention.decode_step.b4.dense")
+    if step is None or dense is None:
+        return [_missing(gate, "paged_attention.decode_step.b4.{paged,dense}")]
+    limit = THRESHOLDS["paged_step.max_ratio_vs_dense"]
+    ratio = step[0] / dense[0] if dense[0] else float("inf")
+    return [GateResult(gate, ratio <= limit,
+                       f"paged {step[0]:.0f}us vs dense {dense[0]:.0f}us "
+                       f"at batch 4 mixed ({ratio:.2f}x, need <= {limit}x)")]
+
+
+def _check_speedup_row(rows: Rows, gate: str, name: str, key: str,
+                       threshold: float) -> List[GateResult]:
+    row = rows.get(name)
+    if row is None:
+        return [_missing(gate, name)]
+    val = _derived_num(row[1], key)
+    if val is None:
+        return [GateResult(gate, False,
+                           f"{name}: no {key}= in derived column")]
+    return [GateResult(gate, val >= threshold,
+                       f"{name}: {key}={val:.2f} (need >= {threshold})")]
+
+
+def _check_admission(rows: Rows) -> List[GateResult]:
+    gate = "fused admission stall"
+    name = "paged_attention.mixed_admission.fused"
+    row = rows.get(name)
+    if row is None:
+        return [_missing(gate, name)]
+    limit = THRESHOLDS["mixed_admission.max_stall_ratio"]
+    ratio = _derived_num(row[1], "ratio")
+    if ratio is None:
+        return [GateResult(gate, False,
+                           f"{name}: no ratio= in derived column")]
+    return [GateResult(gate, ratio <= limit,
+                       f"in-flight decode stall {ratio:.2f}x blocking "
+                       f"scheduler (need <= {limit}x)")]
+
+
+def _check_shared_prefix(rows: Rows) -> List[GateResult]:
+    gate = "shared-prefix admission"
+    name = "paged_attention.shared_prefix.cached"
+    out = _check_speedup_row(rows, gate, name, "speedup",
+                             THRESHOLDS["shared_prefix.min_speedup"])
+    row = rows.get(name)
+    if row is not None:
+        hits = _derived_num(row[1], "prefix_hits") or 0
+        reused = _derived_num(row[1], "prefix_tokens_reused") or 0
+        out.append(GateResult(
+            gate, hits > 0 and reused > 0,
+            f"prefix_hits={hits:.0f} prefix_tokens_reused={reused:.0f} "
+            f"(need both > 0)"))
+    return out
+
+
+def _check_spec_decode(rows: Rows) -> List[GateResult]:
+    gate = "speculative decode"
+    name = "paged_attention.spec_decode.on"
+    out = _check_speedup_row(rows, gate, name, "speedup",
+                             THRESHOLDS["spec_decode.min_speedup"])
+    row = rows.get(name)
+    if row is not None:
+        accepted = _derived_num(row[1], "spec_accepted") or 0
+        rate = _derived_num(row[1], "accept_rate") or 0
+        out.append(GateResult(
+            gate, accepted > 0,
+            f"spec_accepted={accepted:.0f} accept_rate={rate:.2f} "
+            f"(need accepted > 0)"))
+    return out
+
+
+_CHECKS = (_check_serve_ingest, _check_paged_step,
+           lambda rows: _check_speedup_row(
+               rows, "paged engine throughput",
+               "paged_attention.engine_mixed16.paged", "speedup",
+               THRESHOLDS["engine_mixed16.min_speedup"]),
+           _check_admission, _check_shared_prefix, _check_spec_decode)
+
+
+def check(rows: Rows) -> List[GateResult]:
+    """Run every gate; a missing row is a failure, never a crash."""
+    out: List[GateResult] = []
+    for fn in _CHECKS:
+        out.extend(fn(rows))
+    return out
+
+
+def render_report(results: List[GateResult]) -> str:
+    lines = []
+    for r in results:
+        lines.append(f"[{'PASS' if r.ok else 'FAIL'}] {r.gate}: {r.detail}")
+    failed = sum(1 for r in results if not r.ok)
+    lines.append(f"{len(results) - failed}/{len(results)} gates passed")
+    return "\n".join(lines)
+
+
+def render_step_summary(rows: Rows, results: List[GateResult]) -> str:
+    """Markdown for $GITHUB_STEP_SUMMARY: gates first, full table after."""
+    lines = ["## Perf gates", "", "| gate | result | detail |",
+             "| --- | --- | --- |"]
+    for r in results:
+        mark = "✅" if r.ok else "❌"
+        lines.append(f"| {r.gate} | {mark} | {r.detail} |")
+    lines += ["", "<details><summary>quick-bench rows</summary>", "",
+              "| benchmark | us/call | derived |", "| --- | ---: | --- |"]
+    for name, (us, derived) in rows.items():
+        lines.append(f"| {name} | {us:.1f} | {derived} |")
+    lines += ["", "</details>", ""]
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python -m benchmarks.check_gates <bench.csv>",
+              file=sys.stderr)
+        return 2
+    rows = parse_rows(argv[0])
+    results = check(rows)
+    print(render_report(results))
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(render_step_summary(rows, results))
+    return 1 if any(not r.ok for r in results) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import uuid as _uuid
-from typing import Any, Callable, Dict, List
+from typing import Any, Dict, List
 
 import numpy as np
 

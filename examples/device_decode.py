@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
 from repro.core import pages
-from repro.core.device import decode_page_device, plan_device_layout
+from repro.core.device import decode_page_device
 from repro.data import (DataConfig, device_batches, example_layout,
                         synthetic_corpus, train_example_struct,
                         write_example_pages)

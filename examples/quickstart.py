@@ -10,7 +10,7 @@ import time
 
 import numpy as np
 
-from repro.core import fastwire, pages, types as T, varint, wire
+from repro.core import fastwire, pages, varint, wire
 from repro.core.codegen import load_generated
 from repro.core.compiler import compile_source
 

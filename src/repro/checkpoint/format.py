@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import io
 import json
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 

@@ -17,7 +17,6 @@ Fault-tolerance contract:
 """
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import threading

@@ -18,7 +18,7 @@ computations over the decorator parameters and the `target` table
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 from . import types as T
 from .schema import DecoratorDef, Schema

@@ -11,7 +11,7 @@ Python codec modules (codegen.py does the actual generation).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import List
 
 from . import types as T
 from . import wire

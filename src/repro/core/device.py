@@ -13,7 +13,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
 
 from . import types as T
 from .fastwire import static_dtype

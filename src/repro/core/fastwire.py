@@ -28,7 +28,6 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from . import types as T
-from . import wire
 
 __all__ = [
     "static_dtype",

@@ -7,7 +7,7 @@ Token kinds: IDENT, NUMBER, STRING, BYTES, DOC (/// comments), RAWBLOCK
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 from .types import SchemaError
 

@@ -12,7 +12,6 @@ import threading
 import uuid as _uuid
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
-from .. import types as T
 from .. import wire
 from ..schema import ServiceDef
 from . import wire_types as W

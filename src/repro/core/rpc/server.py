@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import concurrent.futures as _cf
 import threading
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Optional
 
 from .. import types as T
 from .. import wire

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import queue
 import socket
-import threading
 import time
 from typing import Optional, Tuple
 

@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import struct as _struct
 import uuid as _uuid
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 

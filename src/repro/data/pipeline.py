@@ -23,7 +23,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Iterator, List, Optional, Tuple
+from typing import Callable, Iterator, List, Tuple
 
 import numpy as np
 

@@ -24,7 +24,6 @@ the accelerator materializes tensors in the layout the model consumes.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -84,9 +84,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ik == kv_blocks - 1)
     def _emit():
-        l = l_ref[...][:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = l_ref[...][:, :1]
+        denom = jnp.where(denom == 0.0, 1.0, denom)  # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -9,7 +9,6 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from . import bebop_decode as _bd
 from . import flash_attention as _fa

@@ -11,6 +11,17 @@ Two entry points over the same pool of fixed-size KV blocks
     per-query positions so causal in-chunk masking and mixed
     prefill/decode batches are the *same* mask arithmetic.
 
+    This shape is also the speculative-decoding VERIFIER: a draft-verify
+    step feeds each row its pending token plus up to ``spec_len`` drafted
+    continuations (``T = spec_len + 1``), and because the kernel already
+    produces one output per query position, every drafted token is scored
+    in the same branchless pass — per-position logits fall out of the
+    unembed, nothing here changes.  Scoring ``T`` tokens costs one
+    block-table sweep instead of ``T`` sequential decode calls, which is
+    exactly the bandwidth-shaped win the paper gets from removing
+    data-dependent serial work: acceptance turns the one-token-per-step
+    latency chain into a wide read of KV the pool already holds.
+
 In both, the block table is a scalar-prefetch operand
 (``PrefetchScalarGridSpec``), so the index maps translate *logical* block
 j of row b into the *physical* pool block ``table[b, j]`` before the
@@ -89,9 +100,9 @@ def _paged_kernel(tbl_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ji == num_blocks - 1)
     def _emit():
-        l = l_ref[...][:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)     # ctx == 0 rows emit zeros
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = l_ref[...][:, :1]
+        denom = jnp.where(denom == 0.0, 1.0, denom)     # ctx == 0 rows emit zeros
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
@@ -194,9 +205,9 @@ def _paged_prefill_kernel(tbl_ref, ctx_ref, qpos_ref, q_ref, k_ref, v_ref,
 
     @pl.when(ji == num_blocks - 1)
     def _emit():
-        l = l_ref[...][:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)     # ctx == 0 rows emit zeros
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = l_ref[...][:, :1]
+        denom = jnp.where(denom == 0.0, 1.0, denom)     # ctx == 0 rows emit zeros
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_q",

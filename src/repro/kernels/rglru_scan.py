@@ -14,7 +14,7 @@ VPU work with no data-dependent control flow.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

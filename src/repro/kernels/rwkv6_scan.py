@@ -17,7 +17,7 @@ chain, but expressed blockwise in VMEM the whole chunk stays on-chip.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

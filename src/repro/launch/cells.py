@@ -5,11 +5,10 @@ the launchers — kept import-safe (no jax device access at module import).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import (ModelConfig, ShapeConfig, SHAPES, get_config,

@@ -25,7 +25,6 @@ import traceback
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              overrides=None) -> dict:
-    import jax
     from .cells import Cell, CellOverrides
     from .mesh import make_production_mesh
     from .roofline import analyze_lowered, model_flops_for, roofline_terms

@@ -9,7 +9,7 @@ state (the dry-run must set XLA_FLAGS before any jax initialization).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

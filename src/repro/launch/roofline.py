@@ -14,8 +14,6 @@ Hardware constants (TPU v5e-class, per assignment):
 """
 from __future__ import annotations
 
-import dataclasses
-import json
 import time
 from typing import Any, Dict, Optional
 

@@ -46,6 +46,19 @@ def main(argv=None) -> int:
                          "kept resident between requests (0 = bounded "
                          "only by the pool; idle entries are evicted "
                          "when an allocation runs short)")
+    ap.add_argument("--spec-decode", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="self-speculative decoding: an n-gram drafter "
+                         "over each request's own tokens proposes up to "
+                         "--spec-len continuations and one fused verify "
+                         "step scores them all; output tokens are "
+                         "identical to plain greedy decode "
+                         "(--no-spec-decode to disable)")
+    ap.add_argument("--spec-len", type=int, default=4,
+                    help="max drafted tokens per request per decode step")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="shortest suffix n-gram the drafter may match "
+                         "against the request's history")
     ap.add_argument("--dense-cache", action="store_true",
                     help="disable the paged KV cache / mixed-length "
                          "scheduler and serve with the dense batcher")
@@ -71,7 +84,10 @@ def main(argv=None) -> int:
                                      fused_prefill=not args.blocking_prefill,
                                      max_step_tokens=args.max_step_tokens,
                                      prefix_cache=args.prefix_cache,
-                                     prefix_lru_blocks=args.prefix_lru_blocks))
+                                     prefix_lru_blocks=args.prefix_lru_blocks,
+                                     spec_decode=args.spec_decode,
+                                     spec_len=args.spec_len,
+                                     spec_ngram=args.spec_ngram))
     server = build_server(engine)
     host, port, lsock = server.listen_tcp(args.host, args.port)
     mode = "paged" if not args.dense_cache and engine.supports_paged \
@@ -81,10 +97,8 @@ def main(argv=None) -> int:
 
     if args.once:
         import numpy as np
-        from ..core import wire
         from ..core.rpc import Channel, TcpTransport
-        from ..serving.service import GenerateRequest, GenerateResponse, \
-            InferenceService
+        from ..serving.service import InferenceService
         ch = Channel(TcpTransport.connect(host, port))
         inf = ch.typed(InferenceService)
         prompt = np.arange(8, dtype=np.uint32) % cfg.vocab_size

@@ -15,7 +15,7 @@ serving shapes).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np
@@ -245,7 +245,7 @@ def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh) -> Any:
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
     return jax.tree_util.tree_unflatten(
-        treedef, [one(p, l) for p, l in flat])
+        treedef, [one(p, leaf) for p, leaf in flat])
 
 
 def named(mesh, spec_tree):

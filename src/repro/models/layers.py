@@ -7,7 +7,6 @@ for 60-80 layer dry-run compiles).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -9,7 +9,7 @@ dropped (standard GShard/Switch semantics, capacity_factor controls slack).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

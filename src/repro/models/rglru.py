@@ -15,7 +15,7 @@ Decode state per layer: conv tail [B, conv_width-1, lru] + h [B, lru].
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

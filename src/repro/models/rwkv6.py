@@ -11,7 +11,7 @@ Faithful structure per arXiv:2404.05892:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

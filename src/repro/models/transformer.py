@@ -7,8 +7,7 @@ dry-run compiles tractable, and remat applies cleanly to the scanned body.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -251,6 +250,27 @@ class DecoderLM:
         return {"k": jnp.zeros(shape, L.dtype_of(cfg)),
                 "v": jnp.zeros(shape, L.dtype_of(cfg))}
 
+    def _paged_backbone(self, params: Params, tokens: jax.Array, pool,
+                        block_tables: jax.Array, positions: jax.Array,
+                        last_idx: jax.Array):
+        """Shared body of the paged steps: embed, scan the layers against
+        the block pool, final norm.  Returns (x [B, C, D], new pool)."""
+        cfg = self.cfg
+        x = L.embed(params, tokens, cfg)
+
+        def body(x, xs):
+            layer_p, k_l, v_l = xs
+            layer_p = _gather_layer(layer_p, cfg)
+            x, (k_l, v_l) = decoder_layer_paged(layer_p, x, cfg, k_l, v_l,
+                                                block_tables, positions,
+                                                last_idx=last_idx)
+            return x, (k_l, v_l)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], pool["k"], pool["v"]))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, {"k": k_new, "v": v_new}
+
     def paged_step(self, params: Params, tokens: jax.Array, pool,
                    block_tables: jax.Array, positions: jax.Array,
                    last_idx: jax.Array):
@@ -266,24 +286,33 @@ class DecoderLM:
         only to the null block.  Returns (logits [B, V] at last_idx,
         new pool).
         """
-        cfg = self.cfg
-        x = L.embed(params, tokens, cfg)
-
-        def body(x, xs):
-            layer_p, k_l, v_l = xs
-            layer_p = _gather_layer(layer_p, cfg)
-            x, (k_l, v_l) = decoder_layer_paged(layer_p, x, cfg, k_l, v_l,
-                                                block_tables, positions,
-                                                last_idx=last_idx)
-            return x, (k_l, v_l)
-
-        x, (k_new, v_new) = jax.lax.scan(
-            body, x, (params["layers"], pool["k"], pool["v"]))
-        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        x, pool = self._paged_backbone(params, tokens, pool, block_tables,
+                                       positions, last_idx)
         x_last = jnp.take_along_axis(
             x, last_idx[:, None, None].astype(jnp.int32), axis=1)  # [B,1,D]
-        logits = L.unembed(params, x_last, cfg)[:, 0]
-        return logits, {"k": k_new, "v": v_new}
+        logits = L.unembed(params, x_last, self.cfg)[:, 0]
+        return logits, pool
+
+    def paged_step_verify(self, params: Params, tokens: jax.Array, pool,
+                          block_tables: jax.Array, positions: jax.Array,
+                          last_idx: jax.Array):
+        """Speculative-decoding verifier: :meth:`paged_step`, but with
+        logits at EVERY chunk position, not just the last valid one.
+
+        Row layout: ``tokens[b, 0]`` is the row's committed pending token
+        and ``tokens[b, 1:last_idx[b]+1]`` its drafted continuation.  The
+        returned ``logits[b, j]`` scores the vocabulary after the row has
+        consumed tokens ``0..j`` — so ``argmax(logits[b, j]) ==
+        tokens[b, j+1]`` is exactly "draft j+1 verified", and the first
+        mismatch's argmax is the fallback token the sequential decode
+        would have produced.  Positions past ``last_idx`` are padding:
+        their K/V writes go to the null block and their logits are
+        garbage the engine never reads.  Returns (logits [B, C, V],
+        new pool).
+        """
+        x, pool = self._paged_backbone(params, tokens, pool, block_tables,
+                                       positions, last_idx)
+        return L.unembed(params, x, self.cfg), pool
 
     def decode_step(self, params: Params, tokens: jax.Array, cache, pos):
         """tokens: [B, 1]; pos: scalar absolute position."""

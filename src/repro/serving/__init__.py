@@ -17,7 +17,10 @@ Three layers, one subsystem:
   * :mod:`.engine` — jitted prefill/decode steps plus two schedulers:
     :class:`ContinuousBatcher` (dense cache, shape-compatible grouping)
     and :class:`PagedBatcher` (paged cache: chunked prefill, mixed-length
-    batching, mid-generation admission).
+    batching, mid-generation admission, and self-speculative decoding —
+    the :mod:`.spec` n-gram drafter proposes continuation tokens and one
+    fused multi-token verify step commits the accepted prefix, emitted
+    tokens bit-identical to plain greedy decode).
   * :mod:`.service` — the Bebop-RPC ``Inference`` service.  ``Infer`` /
     ``InferStream`` / ``ScorePage`` speak fixed-layout pages in both
     directions (the host never parses a token) and compose under batch
@@ -31,3 +34,4 @@ from .kv_cache import (BlockAllocator, CacheOOM, PagedKVCache,  # noqa: F401
                        PrefixCache, aligned_block_size, block_keys)
 from .service import (InferenceService, InferenceImpl,  # noqa: F401
                       build_server, decode_token_page, encode_prompt_page)
+from .spec import ngram_propose  # noqa: F401

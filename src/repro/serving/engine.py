@@ -39,6 +39,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import get_model
 from .kv_cache import CacheOOM, PagedKVCache, block_keys
+from .spec import ngram_propose
 
 _log = logging.getLogger(__name__)
 
@@ -76,6 +77,17 @@ class ServeConfig:
     # requests (the LRU).  0 = bounded only by the pool: idle cached
     # blocks are evicted on demand when an allocation runs short.
     prefix_lru_blocks: int = 0
+    # self-speculative decoding (serving/spec.py): when every active row
+    # is decoding, an n-gram lookup drafter over each row's OWN
+    # prompt+output proposes up to spec_len continuation tokens, and ONE
+    # verify step (the fused paged-prefill path, all drafted positions
+    # scored at once) advances accepted prefixes several tokens per step.
+    # The verifier's argmax is authoritative, so emitted tokens are
+    # bit-identical to non-speculative greedy decode; a rejected draft is
+    # rolled back by simply not committing its positions.
+    spec_decode: bool = True
+    spec_len: int = 4           # max drafted tokens per request per step
+    spec_ngram: int = 2         # shortest suffix n-gram worth drafting from
 
 
 class Engine:
@@ -93,7 +105,8 @@ class Engine:
             lambda p, b: self.model.prefill(p, b, serve_cfg.cache_len))
         self._decode = jax.jit(self.model.decode_step,
                                donate_argnums=(2,))
-        self._paged_step = None  # compiled lazily by PagedBatcher
+        self._paged_step = None    # compiled lazily by PagedBatcher
+        self._paged_verify = None  # the multi-logit speculative verifier
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
 
     @property
@@ -106,6 +119,14 @@ class Engine:
             self._paged_step = jax.jit(self.model.paged_step,
                                        donate_argnums=(2,))
         return self._paged_step
+
+    def paged_verify_fn(self):
+        """The jitted speculative verify step: same fused paged-prefill
+        body as :meth:`paged_step_fn`, but logits at every position."""
+        if self._paged_verify is None:
+            self._paged_verify = jax.jit(self.model.paged_step_verify,
+                                         donate_argnums=(2,))
+        return self._paged_verify
 
     # -- generation --------------------------------------------------------------
     def generate(self, tokens: np.ndarray, *, max_new_tokens: Optional[int]
@@ -430,6 +451,9 @@ class _PagedReq:                   # compare [B, T] arrays of mixed shapes
     next_tok: Optional[np.ndarray] = None   # [B] pending (unemitted) tokens
     out: List[np.ndarray] = dataclasses.field(default_factory=list)
     pos_next: int = 0                       # absolute position of next write
+    # [B, T + max_new + 1] committed-token history, maintained on emit so
+    # the speculative drafter never rebuilds it (None when spec is off)
+    hist: Optional[np.ndarray] = None
 
     @property
     def rows(self) -> int:
@@ -449,6 +473,8 @@ class _PagedReq:                   # compare [B, T] arrays of mixed shapes
 
     def emit(self, tok: np.ndarray) -> None:
         self.out.append(tok)
+        if self.hist is not None:
+            self.hist[:, self.seq_len + len(self.out) - 1] = tok
         if self.on_token is not None:
             try:
                 self.on_token(len(self.out) - 1, tok)
@@ -514,6 +540,9 @@ class PagedBatcher:
         self.fused = bool(sc.fused_prefill)
         self.max_step_tokens = max(0, int(sc.max_step_tokens))
         self.prefix_enabled = bool(sc.prefix_cache)
+        self.spec_len = max(0, int(sc.spec_len))
+        self.spec = bool(sc.spec_decode) and self.spec_len > 0
+        self.spec_ngram = max(1, int(sc.spec_ngram))
         self.cache = PagedKVCache(
             num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, cache_len=sc.cache_len,
@@ -524,6 +553,7 @@ class PagedBatcher:
         self.cache.pool = engine.model.init_paged_pool(
             self.cache.layout.num_blocks, self.cache.block_size)
         self._step_fn = engine.paged_step_fn()
+        self._verify_fn = engine.paged_verify_fn() if self.spec else None
         # copy-on-write: duplicate one pool block (donated, so in place)
         self._copy_block = jax.jit(
             lambda pool, src, dst: jax.tree_util.tree_map(
@@ -541,7 +571,8 @@ class PagedBatcher:
                       "mixed_steps": 0, "admitted_in_flight": 0,
                       "dense_fallbacks": 0, "worker_errors": 0,
                       "prefix_hits": 0, "prefix_tokens_reused": 0,
-                      "cow_copies": 0}
+                      "cow_copies": 0, "spec_steps": 0,
+                      "spec_proposed": 0, "spec_accepted": 0}
         self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-paged-batcher")
@@ -741,6 +772,13 @@ class PagedBatcher:
             matched.append(m_tok)
         req.tables = np.stack(tabs)
         req.pos_next = min(matched)
+        if self.spec:
+            # one growing history buffer per row (prompt now, generated
+            # tokens appended on emit): the drafter reads a view instead
+            # of re-concatenating the prompt + every emitted token
+            req.hist = np.zeros((rows, t + max(req.max_new_tokens, 0) + 1),
+                                np.int32)
+            req.hist[:, :t] = req.tokens
         if req.pos_next:
             self.stats["prefix_hits"] += rows
             self.stats["prefix_tokens_reused"] += req.pos_next * rows
@@ -762,17 +800,13 @@ class PagedBatcher:
         """
         if not self.prefix_enabled or adv <= 0 or req.tables is None:
             return
-        bs = self.cache.block_size
-        lo, hi = req.pos_next // bs, (req.pos_next + adv - 1) // bs
         for r in range(req.rows):
-            for idx in range(lo, hi + 1):
-                pair = self.cache.ensure_private((req.rid, r), idx)
-                if pair is not None:
-                    src, dst = pair
-                    self.cache.pool = self._copy_block(
-                        self.cache.pool, np.int32(src), np.int32(dst))
-                    req.tables[r, idx] = dst
-                    self.stats["cow_copies"] += 1
+            for idx, src, dst in self.cache.ensure_private_range(
+                    (req.rid, r), req.pos_next, adv):
+                self.cache.pool = self._copy_block(
+                    self.cache.pool, np.int32(src), np.int32(dst))
+                req.tables[r, idx] = dst
+                self.stats["cow_copies"] += 1
 
     def _register_prefix(self, req: _PagedReq) -> None:
         """Index the request's fully-written full prompt blocks, so later
@@ -832,6 +866,23 @@ class PagedBatcher:
             w <<= 1
         return min(w, self.cache.blocks_per_seq)
 
+    def _call_step(self, fn, toks, tables, pos, last) -> np.ndarray:
+        """Run one jitted step over the assembled batch arrays.
+
+        Shared scaffolding of the mixed/decode/verify steps: a step that
+        raises fails EVERY in-flight request (their blocks return to the
+        pool) and re-raises so the worker loop's error accounting sees
+        it.  Returns the logits as a host array."""
+        try:
+            out, self.cache.pool = fn(
+                self.engine.params, jnp.asarray(toks), self.cache.pool,
+                jnp.asarray(tables), jnp.asarray(pos), jnp.asarray(last))
+        except Exception as e:  # noqa: BLE001 - fail every member, survive
+            for req in list(self._active):
+                self._retire(req, exc=e)
+            raise
+        return np.asarray(out)
+
     def _step(self) -> None:
         for req in list(self._active):   # evict expired before device work
             if req.expired():            # (incl. mid-prefill: blocks back)
@@ -840,6 +891,8 @@ class PagedBatcher:
             return
         if any(req.prefilling for req in self._active):
             self._mixed_step()
+        elif self.spec:
+            self._spec_step()
         else:
             self._decode_step()
 
@@ -915,17 +968,9 @@ class PagedBatcher:
             else:
                 toks[i, 0] = req.next_tok[r]
                 pos[i] = req.pos_next     # pads masked via last_idx == 0
-        try:
-            logits, self.cache.pool = self._step_fn(
-                self.engine.params, jnp.asarray(toks), self.cache.pool,
-                jnp.asarray(tables), jnp.asarray(pos), jnp.asarray(last))
-        except Exception as e:  # noqa: BLE001 - fail every member, survive
-            for req in list(self._active):
-                self._retire(req, exc=e)
-            raise
+        logits = self._call_step(self._step_fn, toks, tables, pos, last)
         self.stats["mixed_steps"] += 1
         self.stats["prefill_chunks"] += len(prefilling)
-        logits = np.asarray(logits)
         if decoding:
             self.stats["decode_steps"] += 1
             self.stats["batched_rows"] += n_decode
@@ -940,6 +985,149 @@ class PagedBatcher:
                 req.next_tok = logits[req.slots].argmax(-1).astype(np.int32)
                 if req.max_new_tokens <= 0 or req.expired():
                     self._retire(req)
+
+    # -- speculative decode (draft-then-verify) -----------------------------
+    def _draft(self, req: _PagedReq) -> Optional[np.ndarray]:
+        """Per-row n-gram proposals for one decoding request.
+
+        Returns a [rows, k] int32 array of drafted continuation tokens
+        (lockstep rows are clamped to their shortest proposal so every
+        row advances uniformly), or None when nothing useful can be
+        drafted.  The draft budget never exceeds the tokens the request
+        may still emit after its pending one — which also keeps every
+        speculative write inside the block table the request was
+        admitted with (allocation covers seq_len + max_new_tokens).
+        """
+        budget = min(self.spec_len, req.max_new_tokens - len(req.out) - 1)
+        if budget <= 0:
+            return None
+        hl = req.seq_len + len(req.out)
+        req.hist[:, hl] = req.next_tok   # pending token caps the history
+        rows = [ngram_propose(req.hist[r, :hl + 1], budget,
+                              min_n=self.spec_ngram)
+                for r in range(req.rows)]
+        k = min(len(d) for d in rows)
+        if k == 0:
+            return None
+        return np.stack([d[:k] for d in rows])
+
+    def _spec_step(self) -> None:
+        """Draft-then-verify decode: ONE jitted verify step scores every
+        row's pending token PLUS its drafted continuation (width
+        ``spec_len + 1``, logits at every position), so an accepted
+        prefix advances ``pos_next`` by several tokens in the step a
+        plain decode would have spent on one.
+
+        Rejected drafts need no undo: their K/V writes landed in
+        positions past the committed context (copy-on-write already
+        privatized any shared block in the write range), the position
+        masks keep them unread, and the next step's writes overwrite
+        them — rollback is "don't advance", exactly the prefix-cache
+        ``register_progress`` discipline.  When no row drafts anything
+        (non-repetitive traffic), the step falls through to the plain
+        1-token decode so speculation never costs idle workloads.
+        """
+        drafts: Dict[int, np.ndarray] = {}
+        for req in self._active:
+            d = self._draft(req)
+            if d is not None:
+                drafts[req.rid] = d
+        # drafting is host-side work: a deadline may expire between the
+        # draft and the verify — shed here so an expired request's
+        # blocks return to the pool without paying the device step
+        for req in list(self._active):
+            if req.expired():
+                drafts.pop(req.rid, None)
+                self._retire(req)
+        if not self._active:
+            return
+        if not drafts:
+            self._decode_step()
+            return
+        c = self.spec_len + 1
+        b = self.max_batch
+        for req in list(self._active):
+            d = drafts.get(req.rid)
+            try:
+                self._cow_writes(req, 1 + (d.shape[1] if d is not None
+                                           else 0))
+            except CacheOOM as e:
+                drafts.pop(req.rid, None)
+                self._retire(req, exc=e)
+        if not self._active:
+            return
+        max_ctx = max(
+            req.pos_next + 1 + (drafts[req.rid].shape[1]
+                                if req.rid in drafts else 0)
+            for req in self._active)
+        m_used = self._table_width(max_ctx)
+        toks = np.zeros((b, c), np.int32)
+        tables = np.zeros((b, m_used), np.int32)  # null block: idle rows
+        pos = np.zeros((b, c), np.int32)
+        last = np.zeros((b,), np.int32)
+        n_rows = 0
+        for i, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            req, r = slot
+            d = drafts.get(req.rid)
+            k = 0 if d is None else d.shape[1]
+            toks[i, 0] = req.next_tok[r]
+            if k:
+                toks[i, 1:1 + k] = d[r]
+            # padding repeats the last valid position (same trick as the
+            # mixed step): keeps each row's ctx tight for block skipping
+            pos[i] = req.pos_next + np.minimum(
+                np.arange(c, dtype=np.int32), k)
+            last[i] = k
+            tables[i] = req.tables[r][:m_used]
+            n_rows += 1
+        logits = self._call_step(self._verify_fn, toks, tables, pos, last)
+        self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
+        self.stats["batched_rows"] += n_rows
+        for req in list(self._active):
+            self._advance_spec(req, logits, drafts.get(req.rid))
+
+    def _advance_spec(self, req: _PagedReq, logits: np.ndarray,
+                      draft: Optional[np.ndarray]) -> None:
+        """Commit a verify step's result for one request.
+
+        ``logits[slot, j]`` scores the vocabulary after the row consumed
+        chunk tokens 0..j, so the emitted sequence below replays the
+        sequential greedy loop exactly: each iteration emits one token
+        and applies the same max_new_tokens-then-stop-token checks as
+        :meth:`_advance_decode` — speculative decode changes how many
+        loop iterations one device step funds, never their semantics.
+        """
+        argm = logits[req.slots].argmax(-1).astype(np.int32)    # [R, C]
+        k = 0 if draft is None else draft.shape[1]
+        n_acc = 0   # lockstep rows: accept the prefix EVERY row accepts
+        while n_acc < k and bool((argm[:, n_acc] == draft[:, n_acc]).all()):
+            n_acc += 1
+        if k:
+            self.stats["spec_proposed"] += k * req.rows
+            self.stats["spec_accepted"] += n_acc * req.rows
+        req.emit(req.next_tok.copy())
+        req.pos_next += 1
+        j = 0
+        while True:
+            new = argm[:, j]    # the model's token after the last emitted
+            if len(req.out) >= req.max_new_tokens:
+                self._retire(req)
+                return
+            if req.stop_token is not None \
+                    and bool((new == req.stop_token).all()):
+                self._retire(req)             # stop token not emitted
+                return
+            if j < n_acc:
+                # verified: new == draft[:, j], K/V already resident
+                req.emit(new.copy())
+                req.pos_next += 1
+                j += 1
+            else:
+                req.next_tok = new.copy()     # first unverified token
+                return
 
     # -- decode -------------------------------------------------------------
     def _decode_step(self) -> None:
@@ -965,18 +1153,10 @@ class PagedBatcher:
             tables[i] = req.tables[r][:m_used]
             pos[i] = req.pos_next
             n_rows += 1
-        try:
-            logits, self.cache.pool = self._step_fn(
-                self.engine.params, jnp.asarray(toks), self.cache.pool,
-                jnp.asarray(tables), jnp.asarray(pos)[:, None],
-                jnp.zeros((b,), jnp.int32))
-        except Exception as e:  # noqa: BLE001 - fail every member, survive
-            for req in list(self._active):
-                self._retire(req, exc=e)
-            raise
+        logits = self._call_step(self._step_fn, toks, tables, pos[:, None],
+                                 np.zeros((b,), np.int32))
         self.stats["decode_steps"] += 1
         self.stats["batched_rows"] += n_rows
-        logits = np.asarray(logits)
         for req in list(self._active):
             self._advance_decode(req, logits)
 

@@ -569,6 +569,34 @@ class PagedKVCache:
         blocks[idx] = new
         return old, new
 
+    def ensure_private_range(self, owner: Hashable, start_token: int,
+                             num_tokens: int) -> List[Tuple[int, int, int]]:
+        """Copy-on-write every SHARED block the write range
+        ``[start_token, start_token + num_tokens)`` touches.
+
+        The multi-token write ranges (prefill chunks, and speculative
+        draft-verify steps that write ``1 + spec_len`` positions at once)
+        funnel through here: a write must never mutate a block other
+        requests or the prefix index still read.  Returns
+        ``[(table_idx, old_block, new_block), ...]`` for the blocks that
+        were swapped, so the engine can copy pool contents before
+        writing.  Speculative ROLLBACK needs no inverse operation: a
+        rejected draft's positions are simply never committed
+        (``register_progress`` indexes nothing past the prompt and the
+        scheduler does not advance past the accepted prefix), so the
+        stale K/V is dead weight the next write overwrites.
+        """
+        if num_tokens <= 0:
+            return []
+        bs = self.block_size
+        lo, hi = start_token // bs, (start_token + num_tokens - 1) // bs
+        out: List[Tuple[int, int, int]] = []
+        for idx in range(lo, hi + 1):
+            pair = self.ensure_private(owner, idx)
+            if pair is not None:
+                out.append((idx, pair[0], pair[1]))
+        return out
+
     def table_row(self, owner: Hashable) -> np.ndarray:
         row = np.zeros(self.blocks_per_seq, np.int32)
         blocks = self._tables[owner]

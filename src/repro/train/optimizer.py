@@ -15,7 +15,7 @@ Implemented from scratch (no optax):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -131,7 +131,6 @@ def adamw_update(grads, state, params, cfg: OptimizerConfig
             m_new.astype(mdt), v_new.astype(mdt)
 
     out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-    leaves_def = jax.tree.structure(params)
     new_params = jax.tree.map(lambda t: t[0], out,
                               is_leaf=lambda x: isinstance(x, tuple))
     new_m = jax.tree.map(lambda t: t[1], out,
@@ -140,7 +139,6 @@ def adamw_update(grads, state, params, cfg: OptimizerConfig
                          is_leaf=lambda x: isinstance(x, tuple))
     new_state = dict(state)
     new_state.update({"m": new_m, "v": new_v, "step": step})
-    del leaves_def
     return new_params, new_state
 
 

@@ -54,10 +54,10 @@ def make_train_step(model, opt_cfg: O.OptimizerConfig
 
             def acc(carry, mb):
                 loss_sum, g_sum = carry
-                l, g = jax.value_and_grad(model.loss)(params, mb)
+                lv, g = jax.value_and_grad(model.loss)(params, mb)
                 g_sum = jax.tree.map(
                     lambda a, b: a + b.astype(a.dtype), g_sum, g)
-                return (loss_sum + l, g_sum), None
+                return (loss_sum + lv, g_sum), None
 
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                               params)

@@ -1,0 +1,98 @@
+"""The CI perf-gate module: pass/fail/missing-row behavior.
+
+The gates used to be inline heredoc scripts in the workflow YAML —
+unreviewable and untestable.  These tests pin the contract the workflow
+now relies on: a good CSV exits 0, any threshold miss or missing row
+exits 1 with a readable report, and the step summary carries both the
+gate results and the full bench table.
+"""
+from benchmarks import check_gates as cg
+
+GOOD_ROWS = """\
+name,us_per_call,derived
+serve_ingest.host_parse.4096B,100.0,baseline
+serve_ingest.device_decode.4096B,40.0,speedup=2.50x cv=0.01
+serve_ingest.device_decode.16384B,30.0,speedup=3.40x cv=0.01
+serve_ingest.device_decode.1024B,80.0,speedup=1.20x below-gate-size
+paged_attention.decode_step.b4.dense,400.0,4x batch-1 calls cv=0.02
+paged_attention.decode_step.b4.paged,250.0,speedup=1.60x cv=0.02
+paged_attention.engine_mixed16.paged,900.0,tokens_per_s=80.0 speedup=3.10x
+paged_attention.mixed_admission.fused,120.0,p99=300us ratio=0.12x vs blocking
+paged_attention.shared_prefix.cached,500.0,speedup=6.00x ttft_p50=1.2ms prefix_hits=16 prefix_tokens_reused=8192 cow_copies=0
+paged_attention.spec_decode.on,700.0,tokens_per_s=500.0 speedup=1.80x accept_rate=0.95 spec_proposed=520 spec_accepted=492
+"""
+
+
+def _write(tmp_path, text):
+    p = tmp_path / "bench.csv"
+    p.write_text(text)
+    return str(p)
+
+
+def test_all_gates_pass(tmp_path):
+    rows = cg.parse_rows(_write(tmp_path, GOOD_ROWS))
+    results = cg.check(rows)
+    assert results and all(r.ok for r in results)
+    assert cg.main([_write(tmp_path, GOOD_ROWS)]) == 0
+
+
+def test_threshold_miss_fails_with_readable_report(tmp_path):
+    bad = GOOD_ROWS.replace("speedup=1.80x accept_rate",
+                            "speedup=1.10x accept_rate")
+    rows = cg.parse_rows(_write(tmp_path, bad))
+    results = cg.check(rows)
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert failed[0].gate == "speculative decode"
+    assert "1.10" in failed[0].detail and "1.3" in failed[0].detail
+    report = cg.render_report(results)
+    assert "[FAIL] speculative decode" in report
+    assert cg.main([_write(tmp_path, bad)]) == 1
+
+
+def test_missing_row_is_a_failure_not_a_crash(tmp_path):
+    # drop the whole shared_prefix row: its gate must FAIL and name the
+    # missing row, and every other gate must still be evaluated
+    lines = [ln for ln in GOOD_ROWS.splitlines()
+             if not ln.startswith("paged_attention.shared_prefix")]
+    rows = cg.parse_rows(_write(tmp_path, "\n".join(lines) + "\n"))
+    results = cg.check(rows)
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert "missing" in failed[0].detail
+    assert "shared_prefix" in failed[0].detail
+    assert any(r.gate == "speculative decode" and r.ok for r in results)
+    assert cg.main([_write(tmp_path, "\n".join(lines) + "\n")]) == 1
+
+
+def test_zero_acceptance_fails_even_with_speedup(tmp_path):
+    bad = GOOD_ROWS.replace("spec_accepted=492", "spec_accepted=0")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert "spec_accepted=0" in failed[0].detail
+
+
+def test_error_rows_with_commas_parse_as_derived(tmp_path):
+    text = GOOD_ROWS + \
+        "kernels.ERROR,0,ImportError('no pallas', 'extra, comma')\n"
+    rows = cg.parse_rows(_write(tmp_path, text))
+    assert "ImportError" in rows["kernels.ERROR"][1]
+    assert "extra, comma" in rows["kernels.ERROR"][1]
+
+
+def test_step_summary_written(tmp_path, monkeypatch):
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert cg.main([_write(tmp_path, GOOD_ROWS)]) == 0
+    text = summary.read_text()
+    assert "## Perf gates" in text
+    assert "speculative decode" in text
+    # the full bench table rides along for the per-run trajectory
+    assert "paged_attention.spec_decode.on" in text
+    assert "✅" in text and "❌" not in text
+
+
+def test_usage_error():
+    assert cg.main([]) == 2
+    assert cg.main(["a.csv", "b.csv"]) == 2

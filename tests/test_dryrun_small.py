@@ -3,7 +3,6 @@ exercised by launch/dryrun.py with the 512-device flag; here we verify the
 cell construction, sharding specs and the HLO analyzer)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -11,7 +10,7 @@ from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.launch.cells import arch_shape_cells, input_specs
 from repro.launch.mesh import make_host_mesh
 from repro.launch.roofline import model_flops_for, roofline_terms
-from repro.launch.shardings import batch_specs, param_specs, zero_specs
+from repro.launch.shardings import param_specs, zero_specs
 from repro.utils import hlo as H
 
 
@@ -35,7 +34,6 @@ def test_input_specs_no_allocation(arch):
 
 
 def test_param_specs_shard_big_leaves():
-    import dataclasses
     cfg = get_config("qwen2-72b")
     from repro.models import get_model
     model = get_model(cfg)
@@ -46,7 +44,6 @@ def test_param_specs_shard_big_leaves():
     flat_sp = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     assert len(flat_sh) == len(flat_sp)
     # embedding sharded on vocab
-    d = dict(specs.items()) if isinstance(specs, dict) else specs
     assert "model" in tuple(specs["embed"])
     assert "model" in tuple(specs["lm_head"])
     # attention projections sharded
@@ -133,7 +130,6 @@ def test_hlo_analyzer_collectives():
 
 def test_reduced_smoke_cell_lowers_on_host_mesh():
     """End-to-end mini dry-run: reduced config on the 1x1 mesh."""
-    import dataclasses
     from repro.configs import reduced_config
     from repro.models import get_model
     from repro.train.optimizer import OptimizerConfig, init_opt_state

@@ -42,6 +42,6 @@ def test_dryrun_list_enumerates_40_cells(tmp_path):
         [sys.executable, "-m", "repro.launch.dryrun", "--list"],
         env=env, capture_output=True, text=True, timeout=540)
     assert r.returncode == 0
-    lines = [l for l in r.stdout.splitlines() if l.strip()]
+    lines = [ln for ln in r.stdout.splitlines() if ln.strip()]
     assert len(lines) == 40
-    assert sum(1 for l in lines if "SKIP" in l) == 8
+    assert sum(1 for ln in lines if "SKIP" in ln) == 8

@@ -1,7 +1,6 @@
 """Per-kernel validation: shape/dtype sweeps, interpret=True vs ref oracle."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref

@@ -95,6 +95,52 @@ def test_prefill_decode_consistency(rng):
                                np.asarray(logits_dec), atol=2e-2, rtol=2e-2)
 
 
+def test_paged_step_verify_matches_sequential_steps(rng):
+    """The speculative verifier's per-position logits == what sequential
+    one-token paged steps produce at the same positions (same pool
+    content, same masks) — the property that makes draft acceptance
+    equivalent to running the serial loop."""
+    from repro.serving import PagedKVCache
+
+    cfg = reduced_config(get_config("qwen2-1.5b"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    t = 6
+    toks = rng.integers(0, cfg.vocab_size, (1, t)).astype(np.int32)
+
+    def fresh():
+        cache = PagedKVCache(num_layers=cfg.num_layers,
+                             num_kv_heads=cfg.num_kv_heads,
+                             head_dim=cfg.head_dim, cache_len=64,
+                             block_size=16, max_concurrent=1,
+                             dtype=cfg.dtype, prefix_cache=False)
+        cache.pool = model.init_paged_pool(cache.layout.num_blocks,
+                                           cache.block_size)
+        table = jnp.asarray(cache.allocate(0, 64)[None, :])
+        return cache, table
+
+    # sequential: t one-token steps, logits after consuming tokens 0..j
+    cache, table = fresh()
+    seq_logits = []
+    for j in range(t):
+        logits, cache.pool = model.paged_step(
+            params, jnp.asarray(toks[:, j:j + 1]), cache.pool, table,
+            jnp.full((1, 1), j, jnp.int32), jnp.zeros((1,), jnp.int32))
+        seq_logits.append(np.asarray(logits))
+    # verify: ONE call over all t tokens, logits at every position
+    cache, table = fresh()
+    ver_logits, _ = model.paged_step_verify(
+        params, jnp.asarray(toks), cache.pool, table,
+        jnp.arange(t, dtype=jnp.int32)[None, :],
+        jnp.full((1,), t - 1, jnp.int32))
+    ver_logits = np.asarray(ver_logits)
+    assert ver_logits.shape == (1, t, cfg.vocab_size)
+    for j in range(t):
+        np.testing.assert_allclose(ver_logits[:, j], seq_logits[j],
+                                   atol=1e-4, rtol=1e-4)
+        assert ver_logits[:, j].argmax(-1) == seq_logits[j].argmax(-1)
+
+
 def test_rwkv_decode_matches_forward(rng):
     """RWKV state decode == full-sequence forward (stronger check: exact
     recurrence)."""

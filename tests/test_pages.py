@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.core import pages
-from repro.core import types as T
 from repro.core.hashing import schema_hash
 from repro.data import pack_examples, synthetic_corpus, train_example_struct
 

@@ -8,7 +8,6 @@
   * frame layer roundtrip incl. cursor trailer under arbitrary chunking
   * batch dependency layering: schedule correctness for arbitrary DAGs
 """
-import math
 
 import numpy as np
 import pytest

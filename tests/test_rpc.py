@@ -1,6 +1,5 @@
 """RPC protocol integration tests: all four method types, batch pipelining,
 futures, cursors, deadlines, ownership, transports."""
-import threading
 import time
 import uuid
 
@@ -12,7 +11,6 @@ from repro.core.schema import MethodDef, ServiceDef
 from repro.core.rpc import (Channel, Deadline, Router, RpcError, Server,
                             Status, TcpTransport, connected_pair)
 from repro.core.rpc import wire_types as W
-from repro.core.rpc.deadline import HTTP_HEADER
 
 Req = T.Struct("Req", [T.Field("x", T.INT32)])
 Res = T.Struct("Res", [T.Field("y", T.INT32)])

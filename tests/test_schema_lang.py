@@ -11,7 +11,7 @@ from repro.core.decorators import LuaError, run_lua
 from repro.core.descriptor import (decode_descriptor_set,
                                    encode_descriptor_set, topological_order)
 from repro.core.hashing import lowbias32, method_id, murmur3_lowbias32
-from repro.core.parser import parse_duration, parse_iso8601, parse_schema
+from repro.core.parser import parse_duration, parse_iso8601
 
 BASIC = '''
 edition = "2026"

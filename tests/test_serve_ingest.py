@@ -6,7 +6,6 @@ batcher -> engine -> page-encoded response.  The host never parses a
 token; these tests assert the result is bit-identical to the host-parse
 reference path (Generate over the same prompt).
 """
-import threading
 
 import numpy as np
 import pytest

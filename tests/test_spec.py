@@ -1,0 +1,74 @@
+"""The n-gram drafter behind self-speculative decoding (serving/spec.py).
+
+Pure host-side numpy: these tests pin the lookup semantics the scheduler
+relies on — what gets proposed, from where in the history, and when the
+drafter must stay silent (so the engine falls back to plain decode).
+"""
+import numpy as np
+
+from repro.serving.spec import ngram_propose
+
+
+def test_periodic_history_proposes_the_cycle():
+    h = np.tile(np.array([3, 1, 4, 1, 5], np.int32), 4)
+    d = ngram_propose(h, 5)
+    assert d.tolist() == [3, 1, 4, 1, 5]
+
+
+def test_single_token_fixed_point():
+    # the classic greedy cycle: the model repeats one token forever
+    h = np.array([9, 8] + [7] * 10, np.int32)
+    d = ngram_propose(h, 4)
+    assert d.tolist() == [7, 7, 7, 7]
+    # a run too short for a full continuation still proposes what exists
+    short = np.array([9, 8, 7, 7, 7, 7, 7, 7], np.int32)
+    assert ngram_propose(short, 4).tolist() == [7]
+
+
+def test_no_match_returns_empty():
+    d = ngram_propose(np.arange(16, dtype=np.int32), 4)
+    assert d.size == 0
+
+
+def test_min_ngram_guards_spurious_unigram_matches():
+    # 'suffix token seen once before' is NOT enough at min_n=2: on
+    # near-random text a 1-gram hit is noise that would buy a full-width
+    # verify step with ~zero acceptance
+    h = np.array([5, 1, 2, 3, 4, 5], np.int32)
+    assert ngram_propose(h, 4, min_n=2).size == 0
+    assert ngram_propose(h, 4, min_n=1).tolist() == [1, 2, 3, 4]
+
+
+def test_most_recent_occurrence_wins():
+    # "1 2" occurs twice with different continuations; the newer one
+    # (-> 9) must be proposed, not the older (-> 7)
+    h = np.array([1, 2, 7, 7, 0, 1, 2, 9, 9, 0, 3, 1, 2], np.int32)
+    assert ngram_propose(h, 2).tolist() == [9, 9]
+
+
+def test_prefers_match_with_full_continuation():
+    # on periodic text the newest match abuts the end of history; the
+    # drafter must reach back one period to return a full-length draft
+    h = np.tile(np.array([4, 2], np.int32), 6)
+    assert ngram_propose(h, 4).tolist() == [4, 2, 4, 2]
+
+
+def test_min_ngram_above_default_ceiling_still_drafts():
+    # a min_n above the default max_n must raise the ceiling, not
+    # silently empty the search range (speculation quietly off)
+    h = np.tile(np.arange(6, dtype=np.int32), 4)
+    assert ngram_propose(h, 4, min_n=6).tolist() == [0, 1, 2, 3]
+
+
+def test_budget_clamps_proposal_length():
+    h = np.tile(np.array([3, 1, 4, 1, 5], np.int32), 4)
+    assert ngram_propose(h, 2).tolist() == [3, 1]
+    assert ngram_propose(h, 0).size == 0
+
+
+def test_short_history_never_crashes():
+    assert ngram_propose(np.array([7], np.int32), 4).size == 0
+    assert ngram_propose(np.array([7, 7], np.int32), 4, min_n=1).size == 0 \
+        or ngram_propose(np.array([7, 7], np.int32), 4, min_n=1).tolist() \
+        == [7]
+    assert ngram_propose(np.zeros(0, np.int32), 4).size == 0

@@ -175,7 +175,7 @@ def test_checkpoint_atomic_roundtrip_and_retention():
 def test_checkpoint_crash_leaves_no_partial():
     from repro.checkpoint import CheckpointManager
     with tempfile.TemporaryDirectory() as td:
-        mgr = CheckpointManager(td)
+        CheckpointManager(td)
         # simulate a crash: tmp dir exists, no manifest rename happened
         os.makedirs(os.path.join(td, ".tmp_step_9"))
         mgr2 = CheckpointManager(td)  # next run GCs tmp
