@@ -44,6 +44,19 @@ buy the serving engine?":
     the non-speculative run before timing — speculation restructures the
     serial loop, it never changes the math.
 
+  * ``overload`` — goodput under 2x pool oversubscription: 3 long
+    low-priority requests hold every block when a burst of 8 short
+    high-priority, deadline-bearing requests arrives.  Shed-only
+    (``swap=False``) leaves the burst queued behind the full pool until
+    its deadlines expire; with the swap tier the scheduler pages the
+    low-priority victims' KV blocks out to host memory (bulk
+    fixed-stride copies), serves the burst inside its deadline, then
+    swaps the victims back in and finishes them.  Every completed
+    request is asserted token-identical to an uncontended reference run
+    before anything is reported — preemption moves memory, never math.
+    The deadline is calibrated from the measured uncontended duration,
+    so the workload is self-scaling across machines.
+
 CPU numbers (the CI gate) run the reference paged-attention gather; the
 Pallas kernels are the same schedule on TPU.
 """
@@ -54,8 +67,9 @@ import time
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.core.rpc import Deadline
 from repro.serving import (ContinuousBatcher, Engine, PagedBatcher,
-                           PagedKVCache, ServeConfig)
+                           PagedKVCache, ServeConfig, ShedError)
 from .timing import bench
 
 MAXN = 8
@@ -84,6 +98,19 @@ SPEC_MOTIF_T = 8          # motif length; prompt = motif tiled 4x
 SPEC_PROMPT_T = 32
 SPEC_MAXN = 96            # long decode: the serial loop is what's measured
 SPEC_LEN = 8              # drafted tokens per request per step
+
+# overload workload geometry: low-priority requests that exactly fill the
+# pool, then a high-priority burst that doubles the demand
+OVL_LOWS = 3              # background requests, no deadline
+OVL_LOW_T = 16
+OVL_LOW_MAXN = 64         # 80 tokens -> 5 blocks each = 15 blocks
+OVL_HIGHS = 8             # the deadline-bearing burst
+OVL_HIGH_T = 16
+OVL_HIGH_MAXN = 4         # 20 tokens -> 2 blocks each = 16 blocks
+OVL_BLOCKS = 16           # pool: 15 usable (block 0 is the null block),
+                          # so demand is 31/15 > 2x oversubscription
+OVL_DEADLINE_FRAC = 0.35  # burst deadline as a fraction of the measured
+                          # uncontended reference duration
 
 
 def _decode_step_bench(engine: Engine):
@@ -389,6 +416,114 @@ def _spec_decode_bench(cfg):
     ]
 
 
+def _overload_engine(cfg, *, swap: bool, num_blocks: int):
+    """Engine for the overload workload (spec/prefix off: with the pool
+    deliberately oversubscribed, the measurement is scheduling policy —
+    swap-to-host vs shed — not speculative or cache effects)."""
+    return Engine(cfg, ServeConfig(
+        cache_len=OVL_LOW_T + OVL_LOW_MAXN, max_new_tokens=OVL_LOW_MAXN,
+        max_batch=OVL_LOWS + OVL_HIGHS + 1, prefill_chunk=16,
+        num_blocks=num_blocks, swap=swap, spec_decode=False,
+        prefix_cache=False))
+
+
+def _overload_pass(batcher, lows, highs, deadline_s):
+    """Submit the lows, let each emit a couple of tokens (so they hold
+    the pool mid-decode, the way long-context traffic does), then burst
+    the highs.  Returns (low_outs, high_outs, seconds); a high shed at
+    its deadline is ``None`` in ``high_outs``."""
+    counts = [0] * len(lows)
+
+    def mk_hook(i):
+        def hook(idx, tok):
+            counts[i] += 1
+        return hook
+
+    t0 = time.monotonic()
+    lfuts = [batcher.submit(p, max_new_tokens=OVL_LOW_MAXN, priority=0,
+                            on_token=mk_hook(i))
+             for i, p in enumerate(lows)]
+    while min(counts) < 2:
+        if time.monotonic() - t0 > 300:
+            raise TimeoutError("low-priority requests never started")
+        time.sleep(0.001)
+    hfuts = [batcher.submit(
+        p, max_new_tokens=OVL_HIGH_MAXN, priority=1,
+        deadline=Deadline.after(deadline_s) if deadline_s else None,
+        ttft_slo_ms=deadline_s * 500 if deadline_s else None)
+        for p in highs]
+    low_outs = [f.result(timeout=600) for f in lfuts]
+    high_outs = []
+    for f in hfuts:
+        try:
+            high_outs.append(f.result(timeout=600))
+        except ShedError:
+            high_outs.append(None)
+    return low_outs, high_outs, time.monotonic() - t0
+
+
+def _overload_bench(cfg):
+    """Goodput under 2x oversubscription: swap-to-host vs shed-only."""
+    rng = np.random.default_rng(17)
+    lows = [rng.integers(0, cfg.vocab_size, (1, OVL_LOW_T)).astype(np.int32)
+            for _ in range(OVL_LOWS)]
+    highs = [rng.integers(0, cfg.vocab_size, (1, OVL_HIGH_T))
+             .astype(np.int32) for _ in range(OVL_HIGHS)]
+
+    # uncontended reference: auto-sized pool, nothing queues or preempts.
+    # Pass 0 warms jit; pass 1 yields the reference outputs and the
+    # duration the burst deadline is calibrated from.
+    ref_eng = _overload_engine(cfg, swap=True, num_blocks=0)
+    ref_b = PagedBatcher(ref_eng, max_batch=OVL_LOWS + OVL_HIGHS + 1)
+    _overload_pass(ref_b, lows, highs, None)
+    ref_low, ref_high, t_ref = _overload_pass(ref_b, lows, highs, None)
+    ref_b.close()
+    deadline_s = OVL_DEADLINE_FRAC * t_ref
+
+    def contended(swap):
+        eng = _overload_engine(cfg, swap=swap, num_blocks=OVL_BLOCKS)
+        b = PagedBatcher(eng, max_batch=OVL_LOWS + OVL_HIGHS + 1)
+        # deadline-free warmup pass: warms this engine's jit shapes (and
+        # the swap gather/scatter) AND is the honesty check — contended
+        # scheduling, preempt/resume included, must be token-identical
+        warm_l, warm_h, _ = _overload_pass(b, lows, highs, None)
+        for r, g in zip(ref_low + ref_high, warm_l + warm_h):
+            assert np.array_equal(r, g), "contended != uncontended outputs"
+        before = dict(b.stats)
+        low_outs, high_outs, secs = _overload_pass(b, lows, highs,
+                                                   deadline_s)
+        delta = {k: v - before.get(k, 0) for k, v in b.stats.items()}
+        b.close()
+        for r, g in zip(ref_low, low_outs):
+            assert np.array_equal(r, g), "preempted low != reference"
+        for r, g in zip(ref_high, high_outs):
+            assert g is None or np.array_equal(r, g), \
+                "completed high != reference"
+        goodput = len(low_outs) + sum(g is not None for g in high_outs)
+        return goodput, secs, delta
+
+    g_shed, t_shed, _ = contended(swap=False)
+    g_swap, t_swap, st = contended(swap=True)
+    assert st["preemptions"] > 0, "swap path never preempted a victim"
+    assert st["swap_ins"] > 0, "no preempted victim was ever resumed"
+    total = OVL_LOWS + OVL_HIGHS
+    ratio = g_swap / max(g_shed, 1)
+    return [
+        ("paged_attention.overload.shed_only", t_shed * 1e6,
+         f"goodput={g_shed} of {total} reqs at a "
+         f"{OVL_DEADLINE_FRAC:.2f}x-ref burst deadline, >2x "
+         f"oversubscribed pool (no swap: the burst sheds behind the "
+         f"full pool)"),
+        ("paged_attention.overload.swap", t_swap * 1e6,
+         f"goodput={g_swap} goodput_ratio={ratio:.2f}x "
+         f"preemptions={st['preemptions']} "
+         f"swapped_blocks={st['swapped_blocks']} "
+         f"swap_ins={st['swap_ins']} "
+         f"slo_violations={st['slo_violations']} "
+         f"(victims paged to host, resumed token-identically)"),
+    ]
+
+
 def run(quick: bool = False):
     cfg = reduced_config(get_config("qwen2-1.5b"))
     engine = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=MAXN,
@@ -398,4 +533,5 @@ def run(quick: bool = False):
     rows += _mixed_admission_bench(cfg)
     rows += _shared_prefix_bench(cfg)
     rows += _spec_decode_bench(cfg)
+    rows += _overload_bench(cfg)
     return rows

@@ -43,6 +43,10 @@ THRESHOLDS = {
     # speculative decode on repetitive traffic >= 1.3x the serial loop,
     # and the drafter must actually land accepted tokens
     "spec_decode.min_speedup": 1.3,
+    # under 2x pool oversubscription, swap-to-host preemption must
+    # complete >= 1.5x the requests of shed-only (token-identical), and
+    # the victims must actually round-trip through host memory
+    "overload.min_goodput_ratio": 1.5,
 }
 
 
@@ -177,12 +181,29 @@ def _check_spec_decode(rows: Rows) -> List[GateResult]:
     return out
 
 
+def _check_overload(rows: Rows) -> List[GateResult]:
+    gate = "overload goodput (swap vs shed)"
+    name = "paged_attention.overload.swap"
+    out = _check_speedup_row(rows, gate, name, "goodput_ratio",
+                             THRESHOLDS["overload.min_goodput_ratio"])
+    row = rows.get(name)
+    if row is not None:
+        preempt = _derived_num(row[1], "preemptions") or 0
+        swap_ins = _derived_num(row[1], "swap_ins") or 0
+        out.append(GateResult(
+            gate, preempt > 0 and swap_ins > 0,
+            f"preemptions={preempt:.0f} swap_ins={swap_ins:.0f} "
+            f"(need both > 0: victims must round-trip through host)"))
+    return out
+
+
 _CHECKS = (_check_serve_ingest, _check_paged_step,
            lambda rows: _check_speedup_row(
                rows, "paged engine throughput",
                "paged_attention.engine_mixed16.paged", "speedup",
                THRESHOLDS["engine_mixed16.min_speedup"]),
-           _check_admission, _check_shared_prefix, _check_spec_decode)
+           _check_admission, _check_shared_prefix, _check_spec_decode,
+           _check_overload)
 
 
 def check(rows: Rows) -> List[GateResult]:

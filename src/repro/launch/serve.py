@@ -10,7 +10,12 @@ import argparse
 import sys
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The launcher's flag surface, buildable without side effects.
+
+    Factored out of :func:`main` so the doc-drift test can introspect
+    every flag and assert it is documented in docs/TUNING.md.
+    """
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--host", default="127.0.0.1")
@@ -59,14 +64,41 @@ def main(argv=None) -> int:
     ap.add_argument("--spec-ngram", type=int, default=2,
                     help="shortest suffix n-gram the drafter may match "
                          "against the request's history")
+    ap.add_argument("--swap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="SLO-aware preemption: under pool pressure, page "
+                         "the KV blocks of lowest-priority requests out "
+                         "to host memory and resume them token-identically "
+                         "later, instead of shedding (--no-swap to "
+                         "disable)")
+    ap.add_argument("--default-priority", type=int, default=0,
+                    help="priority class for requests that don't carry "
+                         "one (higher wins; preemption only ever claims "
+                         "strictly-lower victims)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=0.0,
+                    help="default time-to-first-token target in ms "
+                         "(0 = no target); drives the SLO controller "
+                         "and the slo_violations counter")
+    ap.add_argument("--tpot-slo-ms", type=float, default=0.0,
+                    help="default inter-token latency target in ms "
+                         "(0 = no target)")
+    ap.add_argument("--slo-adjust-every", type=int, default=16,
+                    help="scheduler steps between SLO-controller updates "
+                         "to the live --max-step-tokens budget")
     ap.add_argument("--dense-cache", action="store_true",
                     help="disable the paged KV cache / mixed-length "
                          "scheduler and serve with the dense batcher")
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="serve the full model configuration instead of "
+                         "the reduced (CI-sized) one")
     ap.add_argument("--once", action="store_true",
                     help="start, print the port, serve one probe, exit "
                          "(smoke-test mode)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
 
     from ..configs import get_config, reduced_config
     from ..serving import Engine, ServeConfig, build_server
@@ -87,7 +119,12 @@ def main(argv=None) -> int:
                                      prefix_lru_blocks=args.prefix_lru_blocks,
                                      spec_decode=args.spec_decode,
                                      spec_len=args.spec_len,
-                                     spec_ngram=args.spec_ngram))
+                                     spec_ngram=args.spec_ngram,
+                                     swap=args.swap,
+                                     default_priority=args.default_priority,
+                                     ttft_slo_ms=args.ttft_slo_ms,
+                                     tpot_slo_ms=args.tpot_slo_ms,
+                                     slo_adjust_every=args.slo_adjust_every))
     server = build_server(engine)
     host, port, lsock = server.listen_tcp(args.host, args.port)
     mode = "paged" if not args.dense_cache and engine.supports_paged \

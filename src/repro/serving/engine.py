@@ -88,6 +88,19 @@ class ServeConfig:
     spec_decode: bool = True
     spec_len: int = 4           # max drafted tokens per request per step
     spec_ngram: int = 2         # shortest suffix n-gram worth drafting from
+    # SLO-aware scheduling (PagedBatcher only).  swap=True pages the KV
+    # blocks of lowest-priority victims out to host memory under pool
+    # pressure (admission or copy-on-write) instead of shedding; a
+    # preempted request resumes token-identically once blocks free up.
+    swap: bool = True
+    default_priority: int = 0   # priority class when submit() passes none;
+    # higher wins, preemption only ever claims strictly-lower victims
+    ttft_slo_ms: float = 0.0    # default time-to-first-token target (0=off)
+    tpot_slo_ms: float = 0.0    # default inter-token latency target (0=off)
+    # scheduler steps between SLO-controller updates: the controller
+    # nudges the live max_step_tokens budget toward whichever of
+    # TTFT/TPOT the recent window violates more
+    slo_adjust_every: int = 16
 
 
 class Engine:
@@ -262,8 +275,18 @@ class ContinuousBatcher:
     def submit(self, tokens: np.ndarray, *,
                max_new_tokens: Optional[int] = None,
                stop_token: Optional[int] = None,
-               deadline=None) -> _cf.Future:
-        """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32."""
+               deadline=None, priority: Optional[int] = None,
+               ttft_slo_ms: Optional[float] = None,
+               tpot_slo_ms: Optional[float] = None) -> _cf.Future:
+        """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32.
+
+        ``priority``/``ttft_slo_ms``/``tpot_slo_ms`` are accepted for
+        interface parity with :meth:`PagedBatcher.submit` and ignored:
+        the dense scheduler has no preemption tier (a request's cache is
+        a monolithic tensor, not swappable blocks), so priorities cannot
+        change its FIFO shape-merging order.
+        """
+        del priority, ttft_slo_ms, tpot_slo_ms
         tokens = np.atleast_2d(np.asarray(tokens, dtype=np.int32))
         maxn = self.engine.serve.max_new_tokens if max_new_tokens is None \
             else max_new_tokens  # explicit 0 = prefill-only, not the default
@@ -427,6 +450,13 @@ class ContinuousBatcher:
         b = self.stats["batches"]
         return self.stats["batched_rows"] / b if b else 0.0
 
+    def collect_stats(self) -> Dict[str, float]:
+        """Complete snapshot: every counter (all keys pre-initialized at
+        construction) plus live queue depth."""
+        out: Dict[str, float] = dict(self.stats)
+        out["queued_requests"] = len(self._queue)
+        return out
+
 
 # --------------------------------------------------------------------------
 # Paged scheduling (block-pooled KV cache, mixed-length batching)
@@ -445,6 +475,13 @@ class _PagedReq:                   # compare [B, T] arrays of mixed shapes
     rid: int
     on_token: Optional[Callable[[int, np.ndarray], None]] = None
     enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
+    # SLO-aware scheduling: priority class (higher preempts strictly
+    # lower) and per-request latency targets in seconds (0 = no target)
+    priority: int = 0
+    ttft_slo_s: float = 0.0
+    tpot_slo_s: float = 0.0
+    first_emit_at: Optional[float] = None   # observed TTFT/TPOT inputs
+    last_emit_at: Optional[float] = None
     # runtime state (set at admission)
     tables: Optional[np.ndarray] = None     # [B, M] int32 block tables
     slots: List[int] = dataclasses.field(default_factory=list)
@@ -472,6 +509,10 @@ class _PagedReq:                   # compare [B, T] arrays of mixed shapes
         return self.deadline is not None and self.deadline.expired()
 
     def emit(self, tok: np.ndarray) -> None:
+        now = time.monotonic()
+        if self.first_emit_at is None:
+            self.first_emit_at = now
+        self.last_emit_at = now
         self.out.append(tok)
         if self.hist is not None:
             self.hist[:, self.seq_len + len(self.out) - 1] = tok
@@ -524,6 +565,24 @@ class PagedBatcher:
     the dense path).  Requests the pool can never hold (more rows than
     ``max_batch`` or prompts longer than the table) fall back to the
     dense engine inline.
+
+    With ``ServeConfig.swap`` on (the default), pool pressure preempts
+    instead of shedding: when a queued request cannot be admitted (or a
+    copy-on-write cannot get a block), the scheduler picks victims among
+    strictly-lower-priority active requests — lowest priority first,
+    most blocks first, always whole requests (no partial swaps) — and
+    pages their KV blocks to host memory (:meth:`PagedKVCache.swap_out`).
+    A preempted request resumes token-identically once blocks and slots
+    free up (highest priority first), and one that exceeds its deadline
+    while paged out is shed with both its host image and (already
+    returned) device blocks reclaimed.  Per-request TTFT/TPOT SLO
+    targets feed a small controller that nudges the live
+    ``max_step_tokens`` prefill/decode split toward whichever target the
+    recent window violates more.  ``stats["preemptions"]`` /
+    ``stats["swapped_blocks"]`` / ``stats["swap_ins"]`` /
+    ``stats["slo_violations"]`` expose the tier's behavior; every stats
+    key is pre-initialized at construction so dashboards can rely on
+    presence before the first increment.
     """
 
     def __init__(self, engine: Engine, *, max_batch: Optional[int] = None,
@@ -543,6 +602,11 @@ class PagedBatcher:
         self.spec_len = max(0, int(sc.spec_len))
         self.spec = bool(sc.spec_decode) and self.spec_len > 0
         self.spec_ngram = max(1, int(sc.spec_ngram))
+        self.swap = bool(sc.swap)
+        self.default_priority = int(sc.default_priority)
+        self.ttft_slo_s = max(0.0, float(sc.ttft_slo_ms)) / 1e3
+        self.tpot_slo_s = max(0.0, float(sc.tpot_slo_ms)) / 1e3
+        self.slo_adjust_every = max(1, int(sc.slo_adjust_every))
         self.cache = PagedKVCache(
             num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, cache_len=sc.cache_len,
@@ -566,13 +630,25 @@ class PagedBatcher:
         self._slots: List[Optional[Tuple[_PagedReq, int]]] = \
             [None] * self.max_batch
         self._next_rid = 0
+        self._preempted: List[_PagedReq] = []
+        self._ttft_obs: collections.deque = collections.deque(maxlen=128)
+        self._tpot_obs: collections.deque = collections.deque(maxlen=128)
+        self._steps_since_adjust = 0
+        # ceiling for the SLO controller: one full chunk for every row
+        self._step_budget_cap = max(self.max_batch * self.prefill_chunk,
+                                    self.max_step_tokens)
+        # every counter the batcher will ever report, initialized up
+        # front: dashboards and tests can rely on key presence before
+        # the first increment (keys used to appear on first touch)
         self.stats = {"requests": 0, "rows": 0, "shed": 0, "decode_steps": 0,
                       "batched_rows": 0, "prefill_chunks": 0,
                       "mixed_steps": 0, "admitted_in_flight": 0,
                       "dense_fallbacks": 0, "worker_errors": 0,
                       "prefix_hits": 0, "prefix_tokens_reused": 0,
                       "cow_copies": 0, "spec_steps": 0,
-                      "spec_proposed": 0, "spec_accepted": 0}
+                      "spec_proposed": 0, "spec_accepted": 0,
+                      "preemptions": 0, "swapped_blocks": 0, "swap_ins": 0,
+                      "slo_violations": 0, "slo_adjustments": 0}
         self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-paged-batcher")
@@ -582,19 +658,50 @@ class PagedBatcher:
     def submit(self, tokens: np.ndarray, *,
                max_new_tokens: Optional[int] = None,
                stop_token: Optional[int] = None,
-               deadline=None, on_token=None) -> _cf.Future:
+               deadline=None, on_token=None,
+               priority: Optional[int] = None,
+               ttft_slo_ms: Optional[float] = None,
+               tpot_slo_ms: Optional[float] = None) -> _cf.Future:
         """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32.
 
         ``on_token(index, tok)`` is invoked from the worker thread as each
         token is emitted (latency instrumentation / streaming hooks).
+        ``priority`` (higher wins; default ``ServeConfig.default_priority``)
+        and the ``ttft_slo_ms``/``tpot_slo_ms`` latency targets (0 = no
+        target; defaults from ServeConfig) drive the SLO-aware tier.
+
+        Scheduling invariants the tests enforce:
+
+        * **Determinism across contention.**  The emitted token sequence
+          depends only on the prompt and the model — never on batching,
+          chunked/fused prefill, speculative decode, or preempt/resume
+          (a swapped request restores bit-identical KV state).
+        * **Priority preempts strictly lower.**  A queued request only
+          ever claims blocks by paging out active victims of strictly
+          lower priority (lowest first, most blocks first, whole
+          requests only); equal-priority traffic is FIFO with
+          skip-ahead and is never preempted by its peers at admission.
+        * **Deadlines always resolve.**  Every future resolves: with
+          the generated prefix at the deadline, or a :class:`ShedError`
+          (submit, queue, mid-flight, or while swapped out — the latter
+          reclaims host and device resources alike).
+        * **No capacity leaks.**  Whatever path retires a request
+          (finish, shed, error, preempt-then-shed), every block
+          reference it held is released.
         """
         tokens = np.atleast_2d(np.asarray(tokens, dtype=np.int32))
         maxn = self.engine.serve.max_new_tokens if max_new_tokens is None \
             else max_new_tokens  # explicit 0 = prefill-only
+        pr = self.default_priority if priority is None else int(priority)
+        ttft = self.ttft_slo_s if ttft_slo_ms is None \
+            else max(0.0, float(ttft_slo_ms)) / 1e3
+        tpot = self.tpot_slo_s if tpot_slo_ms is None \
+            else max(0.0, float(tpot_slo_ms)) / 1e3
         with self._cond:
             self._next_rid += 1
             p = _PagedReq(tokens, maxn, stop_token, deadline, _cf.Future(),
-                          self._next_rid, on_token)
+                          self._next_rid, on_token, priority=pr,
+                          ttft_slo_s=ttft, tpot_slo_s=tpot)
             if p.seq_len == 0:
                 # reject at the door: an installed 0-token request has no
                 # prefill to run and no next_tok to feed — it would poison
@@ -630,9 +737,11 @@ class PagedBatcher:
         while True:
             with self._cond:
                 while not self._queue and not self._active \
-                        and not self._closed:
+                        and not self._preempted and not self._closed:
                     self._cond.wait()
                 if self._closed and not self._queue and not self._active:
+                    for req in list(self._preempted):
+                        self._retire(req, exc=ShedError("batcher closed"))
                     return
             try:
                 self._admit()
@@ -705,11 +814,15 @@ class PagedBatcher:
             return None, None
 
     def _admit(self) -> None:
+        if self.swap:
+            self._sweep_preempted()
         while True:
             req, dense = self._take_admittable()
             if dense is not None:
                 self._run_dense(dense)
                 continue
+            if req is None and self.swap:
+                req = self._admit_by_preemption()
             if req is None:
                 return
             if self._active:
@@ -721,6 +834,167 @@ class PagedBatcher:
                     self._prefill_blocking(req)
             except Exception as e:  # noqa: BLE001 - fail THIS request only
                 self._retire(req, exc=e)
+
+    # -- preemption / swap tier ---------------------------------------------
+    def _free_slots(self) -> int:
+        return self.max_batch - sum(1 for s in self._slots if s is not None)
+
+    def _free_budget(self) -> int:
+        """Blocks an allocation could get right now (free + evictable)."""
+        return self.cache.num_free_blocks + self.cache.reclaimable
+
+    def _blocks_held(self, req: _PagedReq) -> int:
+        """Block references ``req`` holds — the optimistic swap-out gain
+        (a block another live request shares frees a reference, not a
+        block; the execute loop re-verifies against real headroom)."""
+        return sum(len(self.cache.allocator.blocks_of((req.rid, r)))
+                   for r in range(req.rows))
+
+    def _sweep_preempted(self) -> None:
+        """Shed expired paged-out requests; resume the rest that fit now,
+        highest priority first (FIFO among equals)."""
+        for req in list(self._preempted):
+            if req.expired():
+                self._retire(req, exc=ShedError(
+                    "deadline expired while swapped out"))
+        for req in sorted(self._preempted,
+                          key=lambda r: (-r.priority, r.enqueued_at)):
+            self._try_resume(req)
+
+    def _try_resume(self, req: _PagedReq) -> bool:
+        """Swap a preempted request back in if slots and blocks allow.
+
+        All-or-nothing across rows: if a later row's swap-in raises
+        (allocation raced away), the rows already restored are swapped
+        back out — content makes the round trip unchanged — and the
+        request stays parked.
+        """
+        if req.rows > self._free_slots():
+            return False
+        need = sum(self.cache.swapped_blocks((req.rid, r))
+                   for r in range(req.rows))
+        if need > self._free_budget():
+            return False
+        tabs: List[np.ndarray] = []
+        try:
+            for r in range(req.rows):
+                tabs.append(self.cache.swap_in((req.rid, r)))
+        except CacheOOM:
+            for r in range(len(tabs)):
+                self.cache.swap_out((req.rid, r))
+            return False
+        req.tables = np.stack(tabs)
+        for i in range(self.max_batch):
+            if len(req.slots) == req.rows:
+                break
+            if self._slots[i] is None:
+                self._slots[i] = (req, len(req.slots))
+                req.slots.append(i)
+        self._preempted.remove(req)
+        self._active.append(req)
+        self.stats["swap_ins"] += 1
+        return True
+
+    def _preempt(self, req: _PagedReq) -> None:
+        """Page an active request's KV out to host and park it."""
+        n = 0
+        for r in range(req.rows):
+            n += self.cache.swap_out((req.rid, r))
+        for s in req.slots:
+            self._slots[s] = None
+        req.slots = []
+        req.tables = None
+        self._active.remove(req)
+        self._preempted.append(req)
+        self.stats["preemptions"] += 1
+        self.stats["swapped_blocks"] += n
+
+    def _preempt_candidate(self) -> Optional[Tuple[_PagedReq, int]]:
+        """Highest-priority queued request the paged path could serve
+        (FIFO among equals); returns (request, blocks needed)."""
+        best: Optional[Tuple[_PagedReq, int]] = None
+        with self._cond:
+            for p in self._queue:
+                if p.expired() or p.rows > self.max_batch:
+                    continue
+                try:
+                    need = p.rows * self.cache.blocks_needed(
+                        p.seq_len + max(p.max_new_tokens, 0))
+                except ValueError:
+                    continue   # dense-fallback territory
+                if need > self.cache.allocator.capacity:
+                    continue   # unsatisfiable; _take_admittable sheds it
+                if best is None or p.priority > best[0].priority:
+                    best = (p, need)
+        return best
+
+    def _admit_by_preemption(self) -> Optional[_PagedReq]:
+        """Make room for the best queued request by paging victims out.
+
+        Victims are strictly-lower-priority actives, lowest priority
+        first and most blocks first (fewest victims for the most relief),
+        always swapped WHOLE — a partially-resident request would leave
+        the scheduler with rows it can neither step nor cheaply restore.
+        Returns the dequeued request once coverage is real, or None.
+        """
+        cand = self._preempt_candidate()
+        if cand is None:
+            return None
+        p, need = cand
+        lower = sorted((a for a in self._active if a.priority < p.priority),
+                       key=lambda a: (a.priority, -self._blocks_held(a)))
+        if not lower:
+            return None
+        if need > self._free_budget() + sum(map(self._blocks_held, lower)) \
+                or p.rows > self._free_slots() \
+                + sum(len(v.slots) for v in lower):
+            return None   # even paging every lower victim out can't cover
+        it = iter(lower)
+        while self._free_budget() < need or self._free_slots() < p.rows:
+            v = next(it, None)
+            if v is None:
+                # prefix sharing made the optimistic bound wrong; the
+                # victims already paged out simply resume on a later
+                # sweep — no state to unwind
+                return None
+            self._preempt(v)
+        with self._cond:
+            if p not in self._queue:
+                return None   # shed behind our back (deadline race)
+            self._queue.remove(p)
+        return p
+
+    def _cow_or_relieve(self, req: _PagedReq, adv: int) -> bool:
+        """:meth:`_cow_writes` with pool-pressure relief.
+
+        On CacheOOM (swap enabled): page out the lowest-priority
+        strictly-lower victim and retry; with no such victim,
+        self-preempt — the request keeps its generated work on host and
+        resumes later — unless it is the only active request, where
+        parking it could never free anything.  Re-running the COW scan
+        after relief is idempotent: blocks already privatized probe as
+        exclusively owned.  Returns False when ``req`` left the batch.
+        """
+        while True:
+            try:
+                self._cow_writes(req, adv)
+                return True
+            except CacheOOM as e:
+                if not self.swap:
+                    self._retire(req, exc=e)
+                    return False
+                lower = sorted(
+                    (a for a in self._active
+                     if a is not req and a.priority < req.priority),
+                    key=lambda a: (a.priority, -self._blocks_held(a)))
+                if lower:
+                    self._preempt(lower[0])
+                    continue
+                if len(self._active) > 1:
+                    self._preempt(req)
+                    return False
+                self._retire(req, exc=e)
+                return False
 
     def _run_dense(self, p: _PagedReq) -> None:
         """Oversized request: dense engine inline (rare escape hatch)."""
@@ -887,6 +1161,10 @@ class PagedBatcher:
         for req in list(self._active):   # evict expired before device work
             if req.expired():            # (incl. mid-prefill: blocks back)
                 self._retire(req)
+        self._steps_since_adjust += 1
+        if self._steps_since_adjust >= self.slo_adjust_every:
+            self._steps_since_adjust = 0
+            self._slo_adjust()
         if not self._active:
             return
         if any(req.prefilling for req in self._active):
@@ -927,19 +1205,17 @@ class PagedBatcher:
         # copy-on-write before the shared step: a row about to write into
         # a block the prefix cache (or another request) still reads gets
         # a private copy first.  A COW that cannot get a block even after
-        # LRU eviction fails only ITS request, never the batch.
-        for req, adv in ((r, advances[r.rid]) for r in list(prefilling)):
-            try:
-                self._cow_writes(req, adv)
-            except CacheOOM as e:
-                self._retire(req, exc=e)
+        # LRU eviction pages a victim (or itself) out to host — with
+        # swap off it fails only ITS request, never the batch.
+        for req in list(prefilling):
+            if not self._cow_or_relieve(req, advances[req.rid]):
                 prefilling.remove(req)
         for req in list(decoding):
-            try:
-                self._cow_writes(req, 1)
-            except CacheOOM as e:
-                self._retire(req, exc=e)
+            if not self._cow_or_relieve(req, 1):
                 decoding.remove(req)
+        # relief may have paged out victims from either list
+        prefilling = [r for r in prefilling if r in self._active]
+        decoding = [r for r in decoding if r in self._active]
         if not prefilling and not decoding:
             return
         n_decode = sum(len(r.slots) for r in decoding)
@@ -1048,12 +1324,9 @@ class PagedBatcher:
         b = self.max_batch
         for req in list(self._active):
             d = drafts.get(req.rid)
-            try:
-                self._cow_writes(req, 1 + (d.shape[1] if d is not None
-                                           else 0))
-            except CacheOOM as e:
+            if not self._cow_or_relieve(req, 1 + (d.shape[1] if d is not None
+                                                  else 0)):
                 drafts.pop(req.rid, None)
-                self._retire(req, exc=e)
         if not self._active:
             return
         max_ctx = max(
@@ -1133,10 +1406,8 @@ class PagedBatcher:
     def _decode_step(self) -> None:
         b = self.max_batch
         for req in list(self._active):
-            try:
-                self._cow_writes(req, 1)  # decode writes never hit shared
-            except CacheOOM as e:         # blocks (robustness backstop)
-                self._retire(req, exc=e)
+            # decode writes rarely hit shared blocks (robustness backstop)
+            self._cow_or_relieve(req, 1)
         if not self._active:
             return
         max_ctx = max(req.pos_next + 1 for req in self._active)
@@ -1173,10 +1444,58 @@ class PagedBatcher:
         else:
             req.next_tok = new
 
+    # -- SLO accounting -----------------------------------------------------
+    def _note_slo(self, req: _PagedReq) -> None:
+        """Record observed TTFT/TPOT against the request's targets.
+
+        A request shed before its first token still yields a TTFT
+        observation (its wait so far) — sheds under overload are exactly
+        the signal the controller must see."""
+        now = time.monotonic()
+        if req.ttft_slo_s > 0:
+            ttft = (req.first_emit_at - req.enqueued_at) \
+                if req.first_emit_at is not None else now - req.enqueued_at
+            self._ttft_obs.append((ttft, req.ttft_slo_s))
+            if ttft > req.ttft_slo_s:
+                self.stats["slo_violations"] += 1
+        if req.tpot_slo_s > 0 and req.first_emit_at is not None \
+                and len(req.out) > 1:
+            tpot = (req.last_emit_at - req.first_emit_at) \
+                / (len(req.out) - 1)
+            self._tpot_obs.append((tpot, req.tpot_slo_s))
+            if tpot > req.tpot_slo_s:
+                self.stats["slo_violations"] += 1
+
+    def _slo_adjust(self) -> None:
+        """Feedback controller over the prefill/decode split.
+
+        ``max_step_tokens`` is the one knob trading TTFT against TPOT: a
+        bigger budget lets prefilling rows advance more prompt tokens per
+        fused step (faster first token), a smaller one spends the step on
+        decode rows (steadier inter-token latency).  Halve/double toward
+        whichever target the recent window violates more, clamped to
+        [max_batch + 1, max_batch * prefill_chunk]; the window resets
+        after a move so stale observations can't double-trigger."""
+        ttft, tpot = list(self._ttft_obs), list(self._tpot_obs)
+        f_ttft = sum(1 for o, t in ttft if o > t) / len(ttft) if ttft else 0.0
+        f_tpot = sum(1 for o, t in tpot if o > t) / len(tpot) if tpot else 0.0
+        cur = self.max_step_tokens or self._step_budget_cap
+        new = cur
+        if f_tpot > f_ttft and f_tpot > 0.25:
+            new = max(self.max_batch + 1, cur // 2)
+        elif f_ttft > f_tpot and f_ttft > 0.25:
+            new = min(self._step_budget_cap, cur * 2)
+        if new != cur:
+            self.max_step_tokens = new
+            self.stats["slo_adjustments"] += 1
+            self._ttft_obs.clear()
+            self._tpot_obs.clear()
+
     # -- retirement ---------------------------------------------------------
     def _retire(self, req: _PagedReq, *,
                 exc: Optional[BaseException] = None) -> None:
-        """Free ALL of the request's blocks and resolve its future."""
+        """Free ALL of the request's resources (device blocks AND any
+        host swap image) and resolve its future."""
         for r in range(req.rows):
             self.cache.release((req.rid, r))
         for s in req.slots:
@@ -1184,6 +1503,9 @@ class PagedBatcher:
         req.slots = []
         if req in self._active:
             self._active.remove(req)
+        if req in self._preempted:
+            self._preempted.remove(req)
+        self._note_slo(req)
         if exc is not None:
             if not req.future.done():
                 req.future.set_exception(exc)
@@ -1210,7 +1532,27 @@ class PagedBatcher:
                 p = self._queue.popleft()
                 if not p.future.done():
                     p.future.set_exception(ShedError("batcher closed"))
+            # normally drained by the worker's exit path; cover a worker
+            # that died or timed out so no future is left dangling
+            for p in self._preempted:
+                if not p.future.done():
+                    p.future.set_exception(ShedError("batcher closed"))
+            self._preempted.clear()
 
     def mean_batch_rows(self) -> float:
         b = self.stats["decode_steps"]
         return self.stats["batched_rows"] / b if b else 0.0
+
+    def collect_stats(self) -> Dict[str, float]:
+        """Complete snapshot: every counter in :attr:`stats` (all keys
+        pre-initialized at construction) plus live scheduler gauges."""
+        out: Dict[str, float] = dict(self.stats)
+        out["active_requests"] = len(self._active)
+        out["queued_requests"] = len(self._queue)
+        out["preempted_requests"] = len(self._preempted)
+        out["free_blocks"] = self.cache.num_free_blocks
+        out["max_step_tokens"] = self.max_step_tokens
+        if self.cache.prefix is not None:
+            out["prefix_indexed_blocks"] = len(self.cache.prefix)
+            out["prefix_evictions"] = self.cache.prefix.evictions
+        return out

@@ -50,6 +50,17 @@ private block.  Finished requests' indexed blocks stay resident in an LRU
 (the cache holds one reference of its own) so a hot system prompt
 survives between requests; eviction reclaims the least-recently-used
 unpinned block when the pool runs short.
+
+The same fixed-stride layout is what makes the **swap tier** cheap: a
+preempted request's KV state is a set of whole blocks, so paging it to
+host memory is one bulk gather along the pool's block axis (contiguous
+``[Hkv, bs, hd]`` strides per layer — the paper's "decode is memcpy"
+claim applied to scheduling) and restoring it is one scatter into freshly
+allocated blocks.  Swapping is refcount-aware: :meth:`PagedKVCache.swap_out`
+images the victim's *content* to host and then drops only the victim's own
+references — a prefix block shared with another live request stays
+resident for that request and is never freed out from under it (its
+refcount simply decreases by the victim's share).
 """
 from __future__ import annotations
 
@@ -87,10 +98,25 @@ class BlockAllocator:
 
     Block 0 is reserved (the null block) and never allocated.  Blocks are
     handed out LIFO so recently-freed (likely still-resident) blocks are
-    reused first.  Every live block carries a reference count; handing
-    out a block that still has references raises — that invariant is what
-    the property tests hammer on.  A block rejoins the free list exactly
-    when its last reference is dropped.
+    reused first.
+
+    Invariants (the ones ``tests/test_kv_cache.py``'s hypothesis property
+    tests enforce — the docs and the tests tell the same story):
+
+    * **No double assignment.**  ``alloc`` never hands out a block that
+      still has references; hitting one raises ``AssertionError`` (a
+      corrupt free list), restoring the free list first so even the
+      failure path conserves capacity.
+    * **Exact lifetime.**  A block returns to the free list exactly when
+      its refcount reaches 0 — never earlier (a shared block must survive
+      its first owner), never later (capacity conservation:
+      ``num_free + live blocks == capacity`` at all times).
+    * **All-or-nothing alloc.**  ``alloc(n)`` either records all ``n``
+      blocks under the owner or raises :class:`CacheOOM` with no side
+      effects.
+    * **Wholesale release.**  ``free(owner)`` drops *every* reference the
+      owner holds — the property the shedding and swap-out paths rely on
+      (a retired or paged-out request must never leak pool capacity).
     """
 
     def __init__(self, num_blocks: int, *, reserved: int = 1):
@@ -242,6 +268,24 @@ class PrefixCache:
     prompt survives between requests.  Eviction drops the
     least-recently-used indexed block whose only reference is the
     cache's; blocks pinned by live requests are skipped.
+
+    Invariants (enforced by the property tests in
+    ``tests/test_kv_cache.py``):
+
+    * **Index implies resident.**  Every indexed block carries the
+      cache's own reference, so ``lookup`` can only ever return blocks
+      whose content is live in the pool.  This is also why swapped-out
+      state can never satisfy a match: swap-out frees (or de-references)
+      the victim's blocks, and a block leaves the index *before* it can
+      be freed — there is no window where a key maps to absent content.
+    * **First writer wins.**  ``register`` never remaps a key or
+      re-indexes a block; an identical prompt that raced ahead keeps the
+      index stable and the loser keeps its private copy.
+    * **Leaf-first eviction.**  Only blocks with no indexed child are
+      evicted, so a retained chain is always matchable from its head —
+      eviction never strands reachable descendants.
+    * **Pinned blocks survive.**  A block referenced by any live request
+      (refcount > 1) is never evicted.
     """
 
     _OWNER = "<prefix-lru>"
@@ -354,6 +398,22 @@ class PrefixCache:
         return done
 
 
+@dataclasses.dataclass
+class _SwappedSeq:
+    """Host-side image of one owner's paged KV state while preempted.
+
+    ``host_k``/``host_v`` are ``[L, n, Hkv, bs, hd]`` numpy buffers — the
+    owner's ``n`` blocks gathered in table order.  On accelerator backends
+    these land in page-locked (pinned) host memory via the device runtime;
+    the fixed block stride is what keeps the transfer a handful of bulk
+    contiguous copies instead of a per-token scatter.
+    """
+
+    blocks: int
+    host_k: np.ndarray
+    host_v: np.ndarray
+
+
 class PagedKVCache:
     """Device-resident block pool + per-request block tables.
 
@@ -362,6 +422,19 @@ class PagedKVCache:
     place).  This class owns the *bookkeeping*: which physical blocks back
     which request, and the padded ``[M]`` int32 table rows the kernels
     consume.
+
+    Swap-tier invariants (see :meth:`swap_out` / :meth:`swap_in`; the
+    overload tests in ``tests/test_swap.py`` enforce them):
+
+    * **Content round-trip.**  ``swap_in(swap_out(owner))`` restores the
+      owner's blocks bit-identically (into freshly allocated physical
+      blocks — block *ids* may change, content may not).
+    * **Refcount safety.**  Swap-out drops only the owner's own
+      references; a block shared with another live request or the prefix
+      index stays resident and untouched.
+    * **No leaks either way.**  A swapped owner holds zero device blocks;
+      :meth:`release` on a swapped owner also discards the host image, so
+      shedding a paged-out request reclaims host AND device resources.
     """
 
     def __init__(self, *, num_layers: int, num_kv_heads: int, head_dim: int,
@@ -381,6 +454,9 @@ class PagedKVCache:
         self._tables: Dict[Hashable, List[int]] = {}
         self._keys: Dict[Hashable, List[bytes]] = {}       # per-owner chain
         self._registered: Dict[Hashable, int] = {}         # blocks indexed
+        self._swapped: Dict[Hashable, _SwappedSeq] = {}    # host images
+        self._gather_fn = None   # jitted swap copies, built on first use
+        self._scatter_fn = None
         self._pool = None   # device buffers materialize lazily (or are
         # injected by the engine, whose model owns the pool layout)
         assert self.layout.block_bytes % _ALIGN == 0
@@ -597,6 +673,111 @@ class PagedKVCache:
                 out.append((idx, pair[0], pair[1]))
         return out
 
+    # -- swap tier -----------------------------------------------------------
+    @staticmethod
+    def _pad_ids(blocks: Sequence[int]) -> np.ndarray:
+        """Block ids padded to the next power of two with the null block.
+
+        The swap gather/scatter are jitted per index width; pow2 padding
+        bounds the compilation count at log2(pool).  Padding with block 0
+        is safe by design: the null block is the garbage sink — reading
+        it transfers junk that is sliced off, and scattering junk INTO it
+        can corrupt nothing live.
+        """
+        w = 1
+        while w < max(len(blocks), 1):
+            w <<= 1
+        ids = np.zeros(w, np.int32)
+        ids[:len(blocks)] = blocks
+        return ids
+
+    def _swap_fns(self):
+        if self._gather_fn is None:
+            import jax
+
+            def gather(pool, ids):
+                return pool["k"][:, ids], pool["v"][:, ids]
+
+            def scatter(pool, ids, hk, hv):
+                return {"k": pool["k"].at[:, ids].set(hk),
+                        "v": pool["v"].at[:, ids].set(hv)}
+
+            self._gather_fn = jax.jit(gather)
+            self._scatter_fn = jax.jit(scatter, donate_argnums=(0,))
+        return self._gather_fn, self._scatter_fn
+
+    def is_swapped(self, owner: Hashable) -> bool:
+        return owner in self._swapped
+
+    def swapped_blocks(self, owner: Hashable) -> int:
+        """Blocks the host image of ``owner`` holds (0 = not swapped)."""
+        sw = self._swapped.get(owner)
+        return sw.blocks if sw is not None else 0
+
+    def swap_out(self, owner: Hashable) -> int:
+        """Page ``owner``'s KV blocks out to a host image; returns #blocks.
+
+        One bulk gather along the pool's block axis copies the owner's
+        blocks (table order) to host, then every device reference the
+        owner holds is dropped.  Exclusively-owned blocks return to the
+        free list; blocks shared with other requests or the prefix index
+        merely lose one reference and stay resident — a victim is never
+        swapped out from under the requests it shares a prefix with.
+        The content of shared blocks is imaged too, so a later
+        :meth:`swap_in` restores the owner even if the sharers (and the
+        index) have since released the blocks.
+
+        The owner's chain keys are kept but its registration watermark is
+        reset: on resume the restored blocks are fresh private copies, and
+        re-registering them is first-writer-wins against the index.
+        """
+        blocks = self._tables.get(owner)
+        if blocks is None:
+            raise ValueError(f"owner {owner!r} holds no blocks to swap")
+        if owner in self._swapped:
+            raise ValueError(f"owner {owner!r} is already swapped out")
+        n = len(blocks)
+        gather, _ = self._swap_fns()
+        gk, gv = gather(self.pool, self._pad_ids(blocks))
+        host_k = np.asarray(gk)[:, :n].copy()
+        host_v = np.asarray(gv)[:, :n].copy()
+        self._swapped[owner] = _SwappedSeq(n, host_k, host_v)
+        del self._tables[owner]
+        if owner in self._registered:
+            self._registered[owner] = 0
+        self.allocator.free(owner)
+        if self.prefix is not None:
+            self.prefix.trim()
+        return n
+
+    def swap_in(self, owner: Hashable) -> np.ndarray:
+        """Restore a swapped owner into freshly allocated blocks.
+
+        Allocates ``blocks`` new private blocks (evicting idle prefix
+        blocks under pressure, raising :class:`CacheOOM` with no state
+        change if even that cannot cover), scatters the host image back
+        in one bulk copy, and discards the image.  Returns the new padded
+        table row; physical ids generally differ from before swap-out —
+        only content is guaranteed identical.
+        """
+        sw = self._swapped.get(owner)
+        if sw is None:
+            raise ValueError(f"owner {owner!r} is not swapped out")
+        blocks = self._reserve(sw.blocks, owner)
+        self._tables[owner] = blocks
+        _, scatter = self._swap_fns()
+        ids = self._pad_ids(blocks)
+        lo = self.layout
+        shape = (lo.num_layers, len(ids), lo.num_kv_heads, lo.block_size,
+                 lo.head_dim)
+        hk = np.zeros(shape, sw.host_k.dtype)
+        hv = np.zeros(shape, sw.host_v.dtype)
+        hk[:, :sw.blocks] = sw.host_k
+        hv[:, :sw.blocks] = sw.host_v
+        self.pool = scatter(self.pool, ids, hk, hv)
+        del self._swapped[owner]
+        return self.table_row(owner)
+
     def table_row(self, owner: Hashable) -> np.ndarray:
         row = np.zeros(self.blocks_per_seq, np.int32)
         blocks = self._tables[owner]
@@ -607,10 +788,13 @@ class PagedKVCache:
         """Drop every reference of ``owner`` (finish OR shed path).
 
         Blocks the prefix index retains (or other requests still share)
-        stay resident; everything else returns to the free list."""
+        stay resident; everything else returns to the free list.  If the
+        owner is swapped out, its host image is discarded too — shedding
+        a paged-out request reclaims host and device resources alike."""
         self._tables.pop(owner, None)
         self._keys.pop(owner, None)
         self._registered.pop(owner, None)
+        self._swapped.pop(owner, None)
         n = self.allocator.free(owner)
         if self.prefix is not None:
             self.prefix.trim()   # cap now that this owner's pins are gone

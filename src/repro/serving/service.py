@@ -91,6 +91,12 @@ InferRequest = T.Message("InferRequest", [
     T.Field("page", T.Array(T.BYTE), tag=1),       # PromptRecord{seq} page
     T.Field("max_new_tokens", T.UINT32, tag=2),
     T.Field("stop_token", T.INT32, tag=3),
+    # SLO-aware scheduling (absent -> ServeConfig defaults): priority
+    # class (higher preempts strictly lower under pool pressure) and
+    # per-request latency targets in milliseconds (0 = no target)
+    T.Field("priority", T.INT32, tag=4),
+    T.Field("ttft_slo_ms", T.FLOAT32, tag=5),
+    T.Field("tpot_slo_ms", T.FLOAT32, tag=6),
 ])
 
 InferResponse = T.Message("InferResponse", [
@@ -104,6 +110,18 @@ InferChunk = T.Message("InferChunk", [
     T.Field("page", T.Array(T.BYTE), tag=2),       # GenRecord1 page
 ])
 
+# Scheduler/engine observability: every counter the batcher pre-initializes
+# (so the key set is stable from the first call) as parallel name/value
+# columns — dashboards poll this instead of scraping logs.
+StatsRequest = T.Message("StatsRequest", [
+    T.Field("scope", T.STRING, tag=1),             # reserved; "" = all
+])
+
+StatsResponse = T.Message("StatsResponse", [
+    T.Field("names", T.STRING, tag=1),             # newline-joined keys
+    T.Field("values", T.Array(T.FLOAT64), tag=2),  # aligned with names
+])
+
 InferenceService = ServiceDef("Inference", [
     MethodDef("Tokenize", TokenizeRequest, TokenBatch),
     MethodDef("Generate", GenerateRequest, GenerateResponse),
@@ -112,6 +130,7 @@ InferenceService = ServiceDef("Inference", [
     MethodDef("Infer", InferRequest, InferResponse),
     MethodDef("InferStream", InferRequest, InferChunk, server_stream=True),
     MethodDef("ScorePage", InferResponse, ScoreResponse),
+    MethodDef("Stats", StatsRequest, StatsResponse),
 ])
 
 
@@ -267,7 +286,13 @@ class InferenceImpl:
         fut = self.batcher.submit(
             tokens, max_new_tokens=maxn,
             stop_token=stop if stop >= 0 else None,
-            deadline=ctx.deadline)
+            deadline=ctx.deadline,
+            # absent -> None -> the batcher's ServeConfig defaults apply
+            priority=(int(req["priority"]) if "priority" in req else None),
+            ttft_slo_ms=(float(req["ttft_slo_ms"])
+                         if "ttft_slo_ms" in req else None),
+            tpot_slo_ms=(float(req["tpot_slo_ms"])
+                         if "tpot_slo_ms" in req else None))
         out = self._await(fut, ctx)
         # zero generated tokens (deadline hit right after prefill) is a
         # success with an empty page, not an absent field — clients decode
@@ -382,6 +407,25 @@ class InferenceImpl:
     def Score(self, req: dict, ctx: RpcContext) -> dict:
         tokens = _tokens_2d(req)
         return {"scores": self.engine.score(tokens).astype(np.float32)}
+
+    def Stats(self, req: dict, ctx: RpcContext) -> dict:
+        """Scheduler/engine/ingest counters as aligned name/value columns.
+
+        The batcher pre-initializes every counter it will ever report, so
+        the key set is stable from the very first call — a dashboard can
+        lay out its panels against one response and never see keys appear
+        later.
+        """
+        stats: Dict[str, float] = dict(
+            self.batcher.collect_stats()
+            if hasattr(self.batcher, "collect_stats")
+            else self.batcher.stats)
+        stats.update({f"engine_{k}": v for k, v in self.engine.stats.items()})
+        stats.update({f"ingest_{k}": v for k, v in self.ingest.stats.items()})
+        names = sorted(stats)
+        return {"names": "\n".join(names),
+                "values": np.asarray([float(stats[n]) for n in names],
+                                     np.float64)}
 
 
 def build_server(engine: Engine, *, descriptor: bytes = b"",

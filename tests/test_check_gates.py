@@ -20,6 +20,8 @@ paged_attention.engine_mixed16.paged,900.0,tokens_per_s=80.0 speedup=3.10x
 paged_attention.mixed_admission.fused,120.0,p99=300us ratio=0.12x vs blocking
 paged_attention.shared_prefix.cached,500.0,speedup=6.00x ttft_p50=1.2ms prefix_hits=16 prefix_tokens_reused=8192 cow_copies=0
 paged_attention.spec_decode.on,700.0,tokens_per_s=500.0 speedup=1.80x accept_rate=0.95 spec_proposed=520 spec_accepted=492
+paged_attention.overload.shed_only,60000.0,goodput=3 of 11 reqs at a 0.35x-ref burst deadline
+paged_attention.overload.swap,80000.0,goodput=11 goodput_ratio=3.67x preemptions=4 swapped_blocks=20 swap_ins=4 slo_violations=0
 """
 
 
@@ -71,6 +73,26 @@ def test_zero_acceptance_fails_even_with_speedup(tmp_path):
     failed = [r for r in results if not r.ok]
     assert len(failed) == 1
     assert "spec_accepted=0" in failed[0].detail
+
+
+def test_overload_ratio_miss_fails(tmp_path):
+    bad = GOOD_ROWS.replace("goodput_ratio=3.67x", "goodput_ratio=1.20x")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert failed[0].gate == "overload goodput (swap vs shed)"
+    assert "1.20" in failed[0].detail and "1.5" in failed[0].detail
+
+
+def test_overload_no_preemption_fails_even_with_ratio(tmp_path):
+    # a goodput ratio without any actual host round-trip means the
+    # workload degenerated (e.g. the pool was never oversubscribed)
+    bad = GOOD_ROWS.replace("preemptions=4 swapped_blocks=20 swap_ins=4",
+                            "preemptions=0 swapped_blocks=0 swap_ins=0")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert "preemptions=0" in failed[0].detail
 
 
 def test_error_rows_with_commas_parse_as_derived(tmp_path):

@@ -1,0 +1,60 @@
+"""Doc-drift gates: the docs surface cannot silently rot.
+
+docs/TUNING.md advertises itself as a complete reference of every
+``ServeConfig`` field and every ``launch/serve.py`` flag.  These tests
+make that claim structural: they introspect the dataclass and the
+argparse parser (``build_parser`` exists precisely so the flag surface
+is buildable without side effects) and fail the moment a new knob ships
+undocumented.
+"""
+import dataclasses
+import pathlib
+
+from repro.launch.serve import build_parser
+from repro.serving import ServeConfig
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _tuning_text() -> str:
+    return (ROOT / "docs" / "TUNING.md").read_text()
+
+
+def test_every_serve_config_field_documented():
+    text = _tuning_text()
+    missing = [f.name for f in dataclasses.fields(ServeConfig)
+               if f"`{f.name}`" not in text]
+    assert not missing, (
+        f"ServeConfig fields missing from docs/TUNING.md: {missing} "
+        f"(document each as a backticked `field_name` row)")
+
+
+def test_every_serve_flag_documented():
+    text = _tuning_text()
+    missing = []
+    for action in build_parser()._actions:
+        for opt in action.option_strings:
+            if opt in ("-h", "--help"):
+                continue
+            if opt not in text:
+                missing.append(opt)
+    assert not missing, (
+        f"serve.py flags missing from docs/TUNING.md: {missing} "
+        f"(BooleanOptionalAction flags need BOTH the --x and --no-x "
+        f"spellings mentioned)")
+
+
+def test_readme_links_both_docs():
+    text = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in text
+    assert "docs/TUNING.md" in text
+
+
+def test_architecture_covers_the_lifecycle_and_ownership():
+    text = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    for state in ("QUEUED", "PREFILLING", "DECODING", "PREEMPTED",
+                  "FINISHED", "SHED"):
+        assert state in text, f"lifecycle state {state} undocumented"
+    for word in ("swap_out", "swap_in", "refcount", "copy-on-write",
+                 "null block"):
+        assert word in text, f"block-ownership concept {word!r} missing"
