@@ -7,7 +7,12 @@
   3. cursor-resumable token streaming (simulated disconnect)
   4. futures: dispatch long generation, push-based resolve, idempotency
   5. deadline propagation sheds expired work
+  6. the wire->device page path
+  7. ResilientChannel: the transport killed mid-InferStream, the client
+     reconnects and resumes from its cursor — the caller sees one
+     uninterrupted stream
 """
+import threading
 import time
 import uuid
 
@@ -15,7 +20,8 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core import wire
-from repro.core.rpc import Channel, Deadline, RpcError, Status, TcpTransport
+from repro.core.rpc import (Channel, Deadline, ResilientChannel, RpcError,
+                            Status, TcpTransport)
 from repro.serving import (Engine, ServeConfig, build_server,
                            decode_token_page, encode_prompt_page)
 from repro.serving.service import (GenerateRequest, GenerateResponse,
@@ -114,6 +120,41 @@ def main() -> None:
     score = wire.decode(ScoreResponse, batch[1]["payload"])["scores"][0]
     print(f"[infer] Infer->ScorePage pipelined server-side; "
           f"score={score:.3f}")
+
+    # 7. resilience: kill the transport mid-InferStream, watch the
+    # ResilientChannel reconnect and resume from the last cursor
+    from repro.serving.service import InferChunk
+    live = []   # transports handed out, so the chaos thread can kill one
+
+    def dial():
+        t = TcpTransport.connect(host, port)
+        live.append(t)
+        return t
+
+    rc = ResilientChannel(dial)
+    isid = InferenceService.method("InferStream").id
+    raw = wire.encode(InferRequest, {"page": page, "max_new_tokens": 6})
+    seen = threading.Event()
+
+    def killer():   # the "fault": yank the socket after the 2nd chunk
+        seen.wait(timeout=30.0)
+        live[0].close()
+        print("[resilient] transport killed mid-stream...")
+
+    threading.Thread(target=killer, daemon=True).start()
+    tokens, resumed_at = [], None
+    for item in rc.call(isid, raw, server_stream=True):
+        chunk = wire.decode(InferChunk, item.payload)
+        tokens.extend(int(t) for t in
+                      decode_token_page(bytes(bytearray(chunk["page"])))[0])
+        if item.cursor == 2:
+            seen.set()          # arm the killer after two delivered chunks
+        if rc.reconnects and resumed_at is None:
+            resumed_at = item.cursor
+    print(f"[resilient] stream survived: {len(tokens)} tokens "
+          f"{tokens}, reconnects={rc.reconnects}, "
+          f"resumed at cursor={resumed_at} (no gaps, no duplicates)")
+    rc.close()
 
     ch.close()
     lsock.close()

@@ -1,8 +1,13 @@
 """Bebop RPC (paper §7): transport-agnostic, Bebop-encoded at every layer."""
-from .status import Status, RpcError                       # noqa: F401
-from .framing import Frame, Flags, encode_frame, FrameReader  # noqa: F401
+from .status import (Status, RpcError, TransportError,      # noqa: F401
+                     ClientTimeout)
+from .framing import (Frame, Flags, encode_frame,           # noqa: F401
+                      FrameReader, FramingError)
 from .deadline import Deadline                              # noqa: F401
-from .server import Router, RpcContext, Server              # noqa: F401
-from .client import Channel                                 # noqa: F401
+from .server import (Router, RpcContext, Server,            # noqa: F401
+                     ConnectionState, DedupCache)
+from .client import (Channel, ResilientChannel,             # noqa: F401
+                     IDEMPOTENCY_KEY, CLIENT_ID_KEY)
 from .transport import (InMemoryTransport, TcpTransport,    # noqa: F401
-                        Http1Transport, connected_pair)
+                        Http1Transport, connected_pair,
+                        FaultSpec, FaultInjectingTransport)

@@ -19,6 +19,20 @@ HEADER = _struct.Struct("<IBI")
 HEADER_SIZE = 9
 CURSOR_SIZE = 8
 
+# A byte stream that desyncs (truncated or corrupted frame) starts
+# producing garbage headers.  There is no per-frame checksum — payload
+# integrity is the transport's job (TCP/TLS), exactly as in the paper's
+# protocol — but a header whose length or flags are impossible is
+# detectable immediately, and the connection that produced it is
+# poisoned: the reader raises FramingError and the endpoint tears the
+# connection down rather than guessing where the next frame starts.
+MAX_FRAME_PAYLOAD = 1 << 26          # 64 MiB: far above any legit frame
+KNOWN_FLAGS_MASK = 0x1F
+
+
+class FramingError(DecodeError):
+    """The byte stream does not parse as frames; the connection is dead."""
+
 
 class Flags:
     END_STREAM = 0x01
@@ -75,6 +89,14 @@ class FrameReader:
         if len(self._buf) < HEADER_SIZE:
             return None
         length, flags, stream_id = HEADER.unpack_from(self._buf, 0)
+        if length > MAX_FRAME_PAYLOAD:
+            raise FramingError(
+                f"frame length {length} exceeds {MAX_FRAME_PAYLOAD} "
+                f"(desynced or corrupted stream)")
+        if flags & ~KNOWN_FLAGS_MASK:
+            raise FramingError(
+                f"unknown frame flags {flags:#04x} "
+                f"(desynced or corrupted stream)")
         total = HEADER_SIZE + length
         cursor = None
         if flags & Flags.CURSOR:

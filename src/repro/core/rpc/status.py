@@ -51,3 +51,31 @@ class RpcError(Exception):
         self.code = code
         self.message = message
         self.details = details
+
+
+class TransportError(RpcError):
+    """The connection died under a call: the bytes never (fully) made it.
+
+    Always ``UNAVAILABLE``.  Distinct from a server-sent error frame so
+    the resilient client can tell "the server said no" (not retryable)
+    from "the wire failed" (reconnect, then retry idempotent work /
+    resume streams from the cursor).
+    """
+
+    def __init__(self, message: str = "connection lost",
+                 details: bytes = b""):
+        super().__init__(Status.UNAVAILABLE, message, details)
+
+
+class ClientTimeout(RpcError):
+    """The client gave up waiting for a response frame.
+
+    Always ``DEADLINE_EXCEEDED`` (matching the pre-existing wire-visible
+    behavior), but typed: a local wait timeout means *unknown outcome* —
+    the request may have been dropped in flight or may have executed and
+    had its response lost — so it is only safe to retry under an
+    idempotency key, which is exactly what ``ResilientChannel`` does.
+    """
+
+    def __init__(self, message: str = "client timeout"):
+        super().__init__(Status.DEADLINE_EXCEEDED, message)

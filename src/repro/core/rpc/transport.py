@@ -17,11 +17,15 @@ top never knows which one it runs over.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import queue
+import random as _random
 import socket
 import time
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
+from .framing import HEADER_SIZE, FramingError
 from .status import HTTP_FROM_STATUS
 
 
@@ -91,6 +95,135 @@ def connected_pair(latency: float = 0.0
     return client, server
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Per-frame fault rates for :class:`FaultInjectingTransport`.
+
+    Each ``send()`` (one frame on both the client and server paths) draws
+    once from a seeded RNG and suffers at most one fault, checked in
+    order: disconnect, drop, truncate, corrupt, delay.  Rates are
+    absolute probabilities, so their sum must stay <= 1.
+    """
+
+    drop: float = 0.0        # silently discard the frame
+    truncate: float = 0.0    # deliver a strict prefix, then cut the line
+    corrupt: float = 0.0     # damage the frame header, then cut the line
+    disconnect: float = 0.0  # cut the line instead of sending
+    delay: float = 0.0       # deliver late
+    delay_s: float = 0.01    # how late
+
+    def __post_init__(self):
+        total = (self.drop + self.truncate + self.corrupt
+                 + self.disconnect + self.delay)
+        if total > 1.0:
+            raise ValueError(f"fault rates sum to {total} > 1")
+
+
+class FaultInjectingTransport(Transport):
+    """Deterministic (seeded) chaos wrapper around any transport.
+
+    The serving-side counterpart of ``train/fault.py``: every resilience
+    mechanism in the RPC stack is tested against this harness.  Faults
+    are injected on the *send* path — wrap both endpoints of a pair to
+    fault both directions — at frame granularity (each ``Channel``/
+    ``Server`` send carries exactly one frame).
+
+    Two fault kinds deliver damaged bytes (``truncate``, ``corrupt``)
+    and both poison the connection immediately afterwards, the way a
+    real desynced stream ends in a reset: the peer sees the damage (or a
+    stall) and then a clean close, exercising its framing validation and
+    reconnect paths without ever parsing unbounded garbage.  ``corrupt``
+    sets a high bit of the frame-length field, so the damage is always
+    detectable — either an impossible length (FramingError) or a frame
+    the peer waits on until the close lands.  Payload bit rot is
+    deliberately out of scope: integrity inside a delivered frame is the
+    transport's contract (TCP/TLS checksums), as in the paper's
+    protocol.
+
+    ``script`` pins faults to exact send indices (0-based) for
+    regression tests; scripted faults fire regardless of rates.
+    """
+
+    def __init__(self, inner: Transport, spec: FaultSpec = FaultSpec(), *,
+                 seed: int = 0, script: Optional[Dict[int, str]] = None):
+        self.inner = inner
+        self.spec = spec
+        self._rng = _random.Random(seed)
+        self._script = dict(script or {})
+        self._sends = 0
+        self._broken = False
+        self.injected: collections.Counter = collections.Counter()
+
+    # -- fault selection -----------------------------------------------------
+    def _pick_fault(self) -> Optional[str]:
+        idx = self._sends
+        self._sends += 1
+        if idx in self._script:
+            return self._script[idx]
+        r = self._rng.random()
+        s = self.spec
+        for name, rate in (("disconnect", s.disconnect), ("drop", s.drop),
+                           ("truncate", s.truncate), ("corrupt", s.corrupt),
+                           ("delay", s.delay)):
+            if r < rate:
+                return name
+            r -= rate
+        return None
+
+    def _cut(self) -> None:
+        self._broken = True
+        self.inner.close()
+
+    # -- transport interface -------------------------------------------------
+    def send(self, data: bytes) -> None:
+        if self._broken:
+            raise ConnectionError("transport closed (injected fault)")
+        fault = self._pick_fault()
+        if fault is None:
+            self.inner.send(data)
+            return
+        self.injected[fault] += 1
+        if fault == "disconnect":
+            self._cut()
+            raise ConnectionError("injected fault: disconnect")
+        if fault == "drop":
+            return
+        if fault == "truncate":
+            cut = self._rng.randrange(1, len(data)) if len(data) > 1 else 0
+            if cut:
+                self.inner.send(data[:cut])
+            self._cut()
+            raise ConnectionError("injected fault: truncate")
+        if fault == "corrupt":
+            bad = bytearray(data)
+            if len(bad) >= HEADER_SIZE:
+                # set a high bit of the little-endian u32 length field:
+                # the parsed length jumps by >= 2^24, which is always an
+                # impossible frame — deterministically detectable
+                bad[3] |= 0x80
+            else:
+                bad = bytearray(b"\xff" * HEADER_SIZE)
+            self.inner.send(bytes(bad))
+            self._cut()
+            raise ConnectionError("injected fault: corrupt")
+        if fault == "delay":
+            time.sleep(self.spec.delay_s)
+            self.inner.send(data)
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        if self._broken:
+            return b""
+        return self.inner.recv(timeout)
+
+    def close(self) -> None:
+        self._broken = True
+        self.inner.close()
+
+    @property
+    def peer(self) -> str:
+        return f"chaos({self.inner.peer})"
+
+
 class TcpTransport(Transport):
     """Binary frames directly over TCP (§7.2 'binary transports')."""
 
@@ -143,9 +276,15 @@ class Http1Transport(Transport):
     failures.  No HTTP/2, no trailers, no proxies.
     """
 
-    def __init__(self, inner: Transport, *, client: bool):
+    #: reject bodies larger than this before buffering them (a corrupted
+    #: or hostile Content-Length must not make us allocate unboundedly)
+    MAX_BODY = 1 << 26  # 64 MiB, matches framing.MAX_FRAME_PAYLOAD
+
+    def __init__(self, inner: Transport, *, client: bool,
+                 max_body: Optional[int] = None):
         self.inner = inner
         self.is_client = client
+        self.max_body = self.MAX_BODY if max_body is None else max_body
         self._buf = bytearray()
 
     # -- client --------------------------------------------------------------
@@ -184,12 +323,21 @@ class Http1Transport(Transport):
                 for line in head.split("\r\n")[1:]:
                     k, _, v = line.partition(":")
                     if k.strip().lower() == "content-length":
-                        clen = int(v.strip())
+                        try:
+                            clen = int(v.strip())
+                        except ValueError:
+                            raise FramingError(
+                                f"unparseable content-length {v.strip()!r}")
+                if clen < 0 or clen > self.max_body:
+                    raise FramingError(
+                        f"content-length {clen} outside [0, {self.max_body}]")
                 body_start = sep + 4
                 if len(self._buf) >= body_start + clen:
                     body = bytes(self._buf[body_start:body_start + clen])
                     del self._buf[:body_start + clen]
                     return body
+            if sep == -1 and len(self._buf) > 65536:
+                raise FramingError("HTTP header exceeds 64 KiB")
             data = self.inner.recv(timeout)
             if not data:
                 return b""

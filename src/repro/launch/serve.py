@@ -94,6 +94,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--once", action="store_true",
                     help="start, print the port, serve one probe, exit "
                          "(smoke-test mode)")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="graceful-shutdown budget in seconds: on "
+                         "SIGTERM/SIGINT the server stops admitting new "
+                         "calls (health probes still answer), finishes "
+                         "what is in flight up to this long, then closes "
+                         "every listener and connection")
     return ap
 
 
@@ -147,13 +153,28 @@ def main(argv=None) -> int:
         lsock.close()
         return 0
 
-    try:
-        import time
-        while True:
-            time.sleep(3600)
-    except KeyboardInterrupt:
-        lsock.close()
-    return 0
+    # Graceful drain: SIGTERM (orchestrator shutdown) and SIGINT flip an
+    # event; the main thread then drains — new calls refused, health
+    # probes answered, in-flight work finished — before exiting.
+    import signal
+    import threading
+    stop = threading.Event()
+
+    def on_signal(signum, frame):
+        stop.set()
+
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            signal.signal(sig, on_signal)
+        except ValueError:  # non-main thread (embedding/tests)
+            pass
+
+    stop.wait()
+    print(f"draining (timeout {args.drain_timeout:g}s)...", flush=True)
+    completed = server.drain(timeout=args.drain_timeout)
+    print("drain complete" if completed
+          else "drain timeout: exiting with calls in flight", flush=True)
+    return 0 if completed else 1
 
 
 if __name__ == "__main__":

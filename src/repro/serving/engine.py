@@ -229,6 +229,7 @@ class _Pending:                    # look these up with `in` / `.remove()`,
     deadline: Optional[Any]
     future: _cf.Future
     enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
+    cancelled: bool = False     # caller gone (connection died): stop paying
 
     @property
     def rows(self) -> int:
@@ -239,7 +240,10 @@ class _Pending:                    # look these up with `in` / `.remove()`,
         return self.tokens.shape[1]
 
     def expired(self) -> bool:
-        return self.deadline is not None and self.deadline.expired()
+        # cancelled rides the expiry path: every shed sweep that reclaims
+        # an expired request's resources reclaims a cancelled one's too
+        return self.cancelled or (
+            self.deadline is not None and self.deadline.expired())
 
 
 class ContinuousBatcher:
@@ -265,7 +269,8 @@ class ContinuousBatcher:
         self._cond = threading.Condition()
         self._closed = False
         self.stats = {"requests": 0, "rows": 0, "batches": 0,
-                      "batched_rows": 0, "shed": 0, "worker_errors": 0}
+                      "batched_rows": 0, "shed": 0, "worker_errors": 0,
+                      "cancelled": 0}
         self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-batcher")
@@ -314,6 +319,23 @@ class ContinuousBatcher:
     def generate(self, tokens: np.ndarray, **kw) -> np.ndarray:
         """Blocking convenience wrapper around :meth:`submit`."""
         return self.submit(tokens, **kw).result()
+
+    def cancel(self, fut: _cf.Future) -> bool:
+        """Drop the queued request owning ``fut`` (caller's connection died).
+
+        Dense-path scope: only *queued* requests can be abandoned — once a
+        group is assembled its cache is one monolithic tensor mid-kernel,
+        so an executing request runs to completion (its result is simply
+        discarded).  Returns True if the request was found and cancelled.
+        """
+        with self._cond:
+            for p in self._queue:
+                if p.future is fut:
+                    p.cancelled = True
+                    self.stats["cancelled"] += 1
+                    self._cond.notify_all()
+                    return True
+        return False
 
     # -- assembly -----------------------------------------------------------
     def _take_group(self, timeout: Optional[float]) -> Optional[_Pending]:
@@ -482,6 +504,7 @@ class _PagedReq:                   # compare [B, T] arrays of mixed shapes
     tpot_slo_s: float = 0.0
     first_emit_at: Optional[float] = None   # observed TTFT/TPOT inputs
     last_emit_at: Optional[float] = None
+    cancelled: bool = False     # caller gone (connection died): stop paying
     # runtime state (set at admission)
     tables: Optional[np.ndarray] = None     # [B, M] int32 block tables
     slots: List[int] = dataclasses.field(default_factory=list)
@@ -506,7 +529,11 @@ class _PagedReq:                   # compare [B, T] arrays of mixed shapes
         return self.pos_next < self.seq_len
 
     def expired(self) -> bool:
-        return self.deadline is not None and self.deadline.expired()
+        # cancelled rides the expiry path: every shed sweep that reclaims
+        # an expired request's resources (queued, active mid-prefill or
+        # mid-decode, swapped out) reclaims a cancelled one's too
+        return self.cancelled or (
+            self.deadline is not None and self.deadline.expired())
 
     def emit(self, tok: np.ndarray) -> None:
         now = time.monotonic()
@@ -648,7 +675,8 @@ class PagedBatcher:
                       "cow_copies": 0, "spec_steps": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
                       "preemptions": 0, "swapped_blocks": 0, "swap_ins": 0,
-                      "slo_violations": 0, "slo_adjustments": 0}
+                      "slo_violations": 0, "slo_adjustments": 0,
+                      "cancelled": 0}
         self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-paged-batcher")
@@ -731,6 +759,22 @@ class PagedBatcher:
     def generate(self, tokens: np.ndarray, **kw) -> np.ndarray:
         """Blocking convenience wrapper around :meth:`submit`."""
         return self.submit(tokens, **kw).result()
+
+    def cancel(self, fut: _cf.Future) -> bool:
+        """Mark the request owning ``fut`` cancelled (caller's connection
+        died): the scheduler's next sweep reclaims whatever it holds —
+        queue slot, active rows' KV blocks (even mid-prefill), or a
+        swapped-out host image — through the same paths that reclaim an
+        expired deadline.  Returns True if the request was found.
+        """
+        with self._cond:
+            for p in (*self._queue, *self._active, *self._preempted):
+                if p.future is fut:
+                    p.cancelled = True
+                    self.stats["cancelled"] += 1
+                    self._cond.notify_all()
+                    return True
+        return False
 
     # -- worker -------------------------------------------------------------
     def _run(self) -> None:

@@ -11,6 +11,8 @@ the DSL here so it is importable without the compiler):
       Infer(InferRequest): InferResponse;          // page in, page out
       InferStream(InferRequest): stream InferChunk;// page-encoded streaming
       ScorePage(InferResponse): ScoreResponse;     // score a token page
+      Stats(StatsRequest): StatsResponse;          // scheduler counters
+      Health(HealthRequest): HealthResponse;       // liveness + drain state
     }
 
 Everything the paper contributes is exercised on a real model here:
@@ -43,7 +45,8 @@ import numpy as np
 from ..core import fastwire, pages
 from ..core import types as T
 from ..core.schema import MethodDef, ServiceDef
-from ..core.rpc import Router, RpcContext, Server, Status, RpcError
+from ..core.rpc import (Router, RpcContext, Server, Status, RpcError,
+                        IDEMPOTENCY_KEY)
 from .engine import ContinuousBatcher, Engine, PagedBatcher, ShedError
 from .ingest import PageIngest
 
@@ -122,6 +125,20 @@ StatsResponse = T.Message("StatsResponse", [
     T.Field("values", T.Array(T.FLOAT64), tag=2),  # aligned with names
 ])
 
+# Liveness/readiness probe: answered even while the server drains (load
+# balancers must see "draining" to stop routing, not a refused call).
+HealthRequest = T.Message("HealthRequest", [
+    T.Field("verbose", T.BOOL, tag=1),             # include engine gauges
+])
+
+HealthResponse = T.Message("HealthResponse", [
+    T.Field("serving", T.BOOL, tag=1),             # accepting new work
+    T.Field("draining", T.BOOL, tag=2),            # finishing in-flight only
+    T.Field("inflight", T.UINT32, tag=3),          # handler tasks running
+    T.Field("names", T.STRING, tag=4),             # engine gauges (verbose)
+    T.Field("values", T.Array(T.FLOAT64), tag=5),  # aligned with names
+])
+
 InferenceService = ServiceDef("Inference", [
     MethodDef("Tokenize", TokenizeRequest, TokenBatch),
     MethodDef("Generate", GenerateRequest, GenerateResponse),
@@ -131,7 +148,13 @@ InferenceService = ServiceDef("Inference", [
     MethodDef("InferStream", InferRequest, InferChunk, server_stream=True),
     MethodDef("ScorePage", InferResponse, ScoreResponse),
     MethodDef("Stats", StatsRequest, StatsResponse),
+    MethodDef("Health", HealthRequest, HealthResponse),
 ])
+
+#: method ids a draining server still answers: probes must keep working
+#: while in-flight inference finishes, or the balancer flaps the backend
+DRAIN_EXEMPT_METHODS = frozenset(
+    m.id for m in InferenceService.methods if m.name in ("Health", "Stats"))
 
 
 # -- page record schemas -------------------------------------------------------
@@ -215,6 +238,13 @@ class InferenceImpl:
         self.batcher = batcher
         self._plan_lock = threading.Lock()
         self._known_seqs: Dict[int, bool] = {}
+        self._server: Optional[Server] = None
+
+    def attach_server(self, server: Server) -> None:
+        """Wire the impl to its server: Health reports drain state, and
+        probe methods stay answerable while the server drains."""
+        self._server = server
+        server.drain_exempt |= DRAIN_EXEMPT_METHODS
 
     # -- page plumbing -------------------------------------------------------
     def _ensure_plan(self, seq_len: int) -> None:
@@ -293,7 +323,21 @@ class InferenceImpl:
                          if "ttft_slo_ms" in req else None),
             tpot_slo_ms=(float(req["tpot_slo_ms"])
                          if "tpot_slo_ms" in req else None))
-        out = self._await(fut, ctx)
+        # If the caller's connection dies mid-call, cancel so the request's
+        # KV blocks return to the pool instead of decoding for nobody —
+        # UNLESS the call is idempotency-keyed: a keyed caller is coming
+        # back for this exact result (the dedup cache replays it), so it
+        # must run to completion for exactly-once semantics.
+        hook = None
+        cancel = getattr(self.batcher, "cancel", None)
+        if ctx.conn is not None and cancel is not None \
+                and IDEMPOTENCY_KEY not in ctx.metadata:
+            hook = ctx.conn.on_close(lambda: cancel(fut))
+        try:
+            out = self._await(fut, ctx)
+        finally:
+            if hook is not None:
+                ctx.conn.discard(hook)
         # zero generated tokens (deadline hit right after prefill) is a
         # success with an empty page, not an absent field — clients decode
         # unconditionally
@@ -327,14 +371,27 @@ class InferenceImpl:
                                      deadline=ctx.deadline,
                                      start_from=int(ctx.cursor),
                                      on_token=on_token)
-                q.put(None)
             except _Cancelled:
                 pass
             except BaseException as e:  # noqa: BLE001 - relayed to the caller
                 q.put(e)
+            finally:
+                q.put(None)  # always wake the consumer, even if cancelled
 
         threading.Thread(target=worker, daemon=True,
                          name="serve-stream-gen").start()
+        # A consumer that vanishes mid-stream normally surfaces as a failed
+        # send; the conn hook additionally catches the case where the
+        # connection dies while the decode loop is busy between frames —
+        # it both aborts the decode loop and wakes the consumer (which
+        # would otherwise block forever on a queue no one feeds again).
+        def on_conn_close():
+            cancelled.set()
+            q.put(None)
+
+        hook = None
+        if ctx.conn is not None:
+            hook = ctx.conn.on_close(on_conn_close)
         try:
             while True:
                 item = q.get()
@@ -345,6 +402,8 @@ class InferenceImpl:
                 yield item
         finally:
             cancelled.set()  # dropped consumer aborts the decode loop
+            if hook is not None:
+                ctx.conn.discard(hook)
 
     def InferStream(self, req: dict, ctx: RpcContext) -> Iterator[dict]:
         """Page-encoded streaming with cursor resumption (§7.5).
@@ -427,9 +486,34 @@ class InferenceImpl:
                 "values": np.asarray([float(stats[n]) for n in names],
                                      np.float64)}
 
+    def Health(self, req: dict, ctx: RpcContext) -> dict:
+        """Serving/draining state plus (verbose) live engine gauges.
+
+        Registered drain-exempt: a draining server answers this with
+        ``serving=False, draining=True`` while refusing new inference, so
+        a balancer drains traffic instead of flapping the backend.
+        """
+        draining = bool(self._server is not None and self._server.draining)
+        inflight = self._server.inflight if self._server is not None else 0
+        out: dict = {"serving": not draining, "draining": draining,
+                     "inflight": inflight}
+        if req.get("verbose"):
+            gauges: Dict[str, float] = dict(
+                self.batcher.collect_stats()
+                if hasattr(self.batcher, "collect_stats")
+                else self.batcher.stats)
+            names = sorted(gauges)
+            out["names"] = "\n".join(names)
+            out["values"] = np.asarray([float(gauges[n]) for n in names],
+                                       np.float64)
+        return out
+
 
 def build_server(engine: Engine, *, descriptor: bytes = b"",
                  impl: Optional[InferenceImpl] = None) -> Server:
+    impl = impl or InferenceImpl(engine)
     router = Router()
-    router.add_service(InferenceService, impl or InferenceImpl(engine))
-    return Server(router, descriptor=descriptor)
+    router.add_service(InferenceService, impl)
+    server = Server(router, descriptor=descriptor)
+    impl.attach_server(server)
+    return server

@@ -4,7 +4,10 @@
     step; the loop writes an emergency checkpoint and exits cleanly.
     (Cloud TPU preemptions deliver SIGTERM with ~30s of grace.)
   * retry: exponential-backoff wrapper for transient I/O (page reads,
-    checkpoint writes to remote stores).
+    checkpoint writes to remote stores).  Re-exported from
+    ``core/retry.py`` — the serving client's reconnect path shares the
+    same policy implementation (attempts, base delay, cap, jitter,
+    retryable-exception filter).
   * StepWatchdog: detects hung steps (collective deadlock after a peer
     failure) and raises so the supervisor can restart the worker; on a
     multi-pod deployment the runner restarts from the last checkpoint and
@@ -15,9 +18,9 @@ from __future__ import annotations
 import signal
 import threading
 import time
-from typing import Callable, Optional, TypeVar
+from typing import Callable, Optional
 
-T = TypeVar("T")
+from ..core.retry import RetryPolicy, retry  # noqa: F401 - compat re-export
 
 
 class PreemptionHandler:
@@ -48,21 +51,6 @@ class PreemptionHandler:
     @property
     def preempted(self) -> bool:
         return self._flag.is_set()
-
-
-def retry(fn: Callable[[], T], *, attempts: int = 4, base_delay: float = 0.1,
-          retry_on=(IOError, OSError, ConnectionError)) -> T:
-    """Exponential backoff for transient failures."""
-    delay = base_delay
-    for i in range(attempts):
-        try:
-            return fn()
-        except retry_on:
-            if i == attempts - 1:
-                raise
-            time.sleep(delay)
-            delay *= 2
-    raise AssertionError("unreachable")
 
 
 class StepWatchdog:
