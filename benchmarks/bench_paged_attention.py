@@ -57,11 +57,26 @@ buy the serving engine?":
     The deadline is calibrated from the measured uncontended duration,
     so the workload is self-scaling across machines.
 
+  * ``failover`` — goodput of a 3-replica router tier when one replica
+    is killed mid-run, vs the same tier with no failure.  Every request
+    is page-encoded ``Infer`` through the front door; the router fails
+    keyed calls over to survivors and the per-request results are
+    asserted bit-identical to a single-replica reference — a crash may
+    cost throughput, never correctness (no duplicate, no corrupted
+    completion).
+
+  * ``hedged_tail`` — tail latency with one replica behind a slow link
+    (simulated one-way wire latency), hedging off vs on.  Hedged calls
+    fire a second, cancellable attempt on another replica once they
+    outlive the observed latency quantile; the gate requires the hedged
+    p99 to be at most half the unhedged p99.
+
 CPU numbers (the CI gate) run the reference paged-attention gather; the
 Pallas kernels are the same schedule on TPU.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -524,6 +539,194 @@ def _overload_bench(cfg):
     ]
 
 
+# failover workload geometry
+FO_REPLICAS = 3
+FO_REQS = 18              # concurrent keyed Infer calls through the router
+FO_PROMPT_T = 8
+FO_MAXN = 4
+
+# hedged-tail workload geometry
+HT_CALLS = 10             # sequential Infer calls per (un)hedged phase
+HT_SLOW_LATENCY = 0.25    # one-way wire latency of the slow replica (s)
+HT_HEDGE_MS = 40.0        # fallback hedge delay before history exists
+
+
+def _router_tier(engine, names, *, latencies=None, **cfg_kw):
+    """N in-process replicas behind a router server + a dial for clients."""
+    from repro.core.rpc import Channel, connected_pair
+    from repro.serving import InProcessReplica
+    from repro.serving.router import RouterConfig, build_router_server
+
+    latencies = latencies or [0.0] * len(names)
+    reps = [InProcessReplica(engine, n, latency=l)
+            for n, l in zip(names, latencies)]
+    server, router = build_router_server(reps, RouterConfig(**cfg_kw))
+
+    def dial():
+        ct, st = connected_pair()
+        server.serve_transport(st, blocking=False)
+        return Channel(ct)
+
+    return reps, router, dial
+
+
+def _failover_bench(cfg):
+    """Router goodput with one of three replicas killed mid-run."""
+    from repro.core import wire
+    from repro.core.rpc import Channel
+    from repro.serving import InProcessReplica
+    from repro.serving.service import (InferenceService, InferRequest,
+                                       encode_prompt_page)
+
+    engine = Engine(cfg, ServeConfig(
+        cache_len=32, max_new_tokens=FO_MAXN, max_batch=6,
+        prefix_cache=False))
+    iid = InferenceService.method("Infer").id
+    rng = np.random.default_rng(29)
+    raws = [wire.encode(InferRequest, {
+        "page": encode_prompt_page(
+            rng.integers(0, cfg.vocab_size, (1, FO_PROMPT_T))
+            .astype(np.uint32)),
+        "max_new_tokens": FO_MAXN}) for _ in range(FO_REQS)]
+
+    # single-replica reference: the bit-exact expected page per request
+    # (greedy decode is deterministic, so any replica must reproduce it);
+    # doubles as the jit warmup for the timed runs
+    ref = InProcessReplica(engine, "fo-ref")
+    ch = ref.dial()
+    ref_ch = Channel(ch)
+    expected = [bytes(ref_ch.call(iid, raw, timeout=300.0))
+                for raw in raws]
+    ref_ch.close()
+    ref.kill()
+
+    def run_tier(kill_one):
+        reps, router, dial = _router_tier(
+            engine, [f"fo{'k' if kill_one else 'b'}{i}"
+                     for i in range(FO_REPLICAS)],
+            hedge=False, health_interval_s=0.1)
+        results: dict = {}
+        errors: list = []
+        lock = threading.Lock()
+
+        def worker(idx):
+            c = dial()
+            try:
+                out = bytes(c.call(iid, raws[idx], timeout=300.0))
+                with lock:
+                    results.setdefault(idx, []).append(out)
+            except Exception as e:  # noqa: BLE001 - counted, not fatal
+                with lock:
+                    errors.append((idx, e))
+            finally:
+                c.close()
+
+        t0 = time.monotonic()
+        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+                   for i in range(FO_REQS)]
+        for t in threads:
+            t.start()
+        if kill_one:
+            deadline = time.monotonic() + 60.0
+            while not any(r.inflight for r in router.replicas) \
+                    and time.monotonic() < deadline:
+                time.sleep(0.001)
+            victim = max(range(FO_REPLICAS),
+                         key=lambda i: router.replicas[i].inflight)
+            reps[victim].kill()
+        for t in threads:
+            t.join(600.0)
+        secs = time.monotonic() - t0
+        stats = dict(router.stats)
+        router.close()
+        for r in reps:
+            r.kill()
+        return results, errors, secs, stats
+
+    base_res, base_err, t_base, _ = run_tier(kill_one=False)
+    kill_res, kill_err, t_kill, st = run_tier(kill_one=True)
+    for res, err, label in ((base_res, base_err, "baseline"),
+                            (kill_res, kill_err, "killed")):
+        assert not err, f"failover {label}: calls errored: {err[:2]}"
+        dup = sum(len(v) > 1 for v in res.values())
+        bad = sum(v[0] != expected[i] for i, v in res.items())
+        assert dup == 0, f"failover {label}: duplicate completions"
+        assert bad == 0, f"failover {label}: corrupted completions"
+    goodput_base = len(base_res) / t_base
+    goodput_kill = len(kill_res) / t_kill
+    ratio = goodput_kill / goodput_base
+    return [
+        ("paged_attention.failover.baseline", t_base * 1e6,
+         f"goodput={goodput_base:.1f} req_per_s "
+         f"completed={len(base_res)} of {FO_REQS} "
+         f"({FO_REPLICAS} replicas, no failure)"),
+        ("paged_attention.failover.killed", t_kill * 1e6,
+         f"goodput_ratio={ratio:.2f} completed={len(kill_res)} "
+         f"of {FO_REQS} duplicates=0 corrupted=0 "
+         f"failovers={st['failovers']:.0f} "
+         f"(one replica killed mid-run, keyed calls resubmitted)"),
+    ]
+
+
+def _hedged_tail_bench(cfg):
+    """Infer tail latency with one slow-wire replica, hedging off vs on."""
+    from repro.core import wire
+    from repro.serving.service import (InferenceService, InferRequest,
+                                       encode_prompt_page)
+
+    engine = Engine(cfg, ServeConfig(
+        cache_len=32, max_new_tokens=FO_MAXN, max_batch=4,
+        prefix_cache=False))
+    iid = InferenceService.method("Infer").id
+    raw = wire.encode(InferRequest, {
+        "page": encode_prompt_page(
+            np.random.default_rng(31)
+            .integers(0, cfg.vocab_size, (1, FO_PROMPT_T))
+            .astype(np.uint32)),
+        "max_new_tokens": FO_MAXN})
+
+    def run_phase(hedge):
+        # the slow replica is FIRST so load-tie routing makes it the
+        # primary; affinity off so every call faces the slow link
+        reps, router, dial = _router_tier(
+            engine, [f"ht{'h' if hedge else 'u'}-slow",
+                     f"ht{'h' if hedge else 'u'}-fast"],
+            latencies=[HT_SLOW_LATENCY, 0.0],
+            hedge=hedge, hedge_delay_ms=HT_HEDGE_MS, hedge_quantile=0.25,
+            affinity_prefix=0, health_interval_s=0)
+        c = dial()
+        c.call(iid, raw, timeout=300.0)      # warmup (jit + connections)
+        lats = []
+        for _ in range(HT_CALLS):
+            t0 = time.monotonic()
+            c.call(iid, raw, timeout=300.0)
+            lats.append(time.monotonic() - t0)
+        stats = dict(router.stats)
+        c.close()
+        router.close()
+        for r in reps:
+            r.kill()
+        return lats, stats
+
+    lats_u, _ = run_phase(hedge=False)
+    lats_h, st = run_phase(hedge=True)
+    p50_u, p99_u = np.percentile(lats_u, [50, 99])
+    p50_h, p99_h = np.percentile(lats_h, [50, 99])
+    assert st["hedges_fired"] > 0, "hedging never fired"
+    return [
+        ("paged_attention.hedged_tail.unhedged", p99_u * 1e6,
+         f"p50={p50_u * 1e3:.1f}ms p99={p99_u * 1e3:.1f}ms "
+         f"one replica behind a {HT_SLOW_LATENCY * 1e3:.0f}ms one-way "
+         f"link, hedging off (n={HT_CALLS})"),
+        ("paged_attention.hedged_tail.hedged", p99_h * 1e6,
+         f"p99_ratio={p99_h / p99_u:.2f} p50={p50_h * 1e3:.1f}ms "
+         f"p99={p99_h * 1e3:.1f}ms "
+         f"hedges_fired={st['hedges_fired']:.0f} "
+         f"hedges_won={st['hedges_won']:.0f} "
+         f"(second attempt after the observed latency quantile)"),
+    ]
+
+
 def run(quick: bool = False):
     cfg = reduced_config(get_config("qwen2-1.5b"))
     engine = Engine(cfg, ServeConfig(cache_len=64, max_new_tokens=MAXN,
@@ -534,4 +737,6 @@ def run(quick: bool = False):
     rows += _shared_prefix_bench(cfg)
     rows += _spec_decode_bench(cfg)
     rows += _overload_bench(cfg)
+    rows += _failover_bench(cfg)
+    rows += _hedged_tail_bench(cfg)
     return rows

@@ -47,6 +47,13 @@ THRESHOLDS = {
     # complete >= 1.5x the requests of shed-only (token-identical), and
     # the victims must actually round-trip through host memory
     "overload.min_goodput_ratio": 1.5,
+    # killing one of three replicas mid-run must keep router goodput at
+    # >= 0.6x the no-failure tier, with zero duplicate or corrupted
+    # completions (the bench asserts bit-identity before reporting)
+    "failover.min_goodput_ratio": 0.6,
+    # with one replica behind a slow link, hedged p99 <= 0.5x unhedged,
+    # and the hedge must have actually fired
+    "hedged_tail.max_p99_ratio": 0.5,
 }
 
 
@@ -197,13 +204,54 @@ def _check_overload(rows: Rows) -> List[GateResult]:
     return out
 
 
+def _check_failover(rows: Rows) -> List[GateResult]:
+    gate = "failover goodput (replica kill)"
+    name = "paged_attention.failover.killed"
+    out = _check_speedup_row(rows, gate, name, "goodput_ratio",
+                             THRESHOLDS["failover.min_goodput_ratio"])
+    row = rows.get(name)
+    if row is not None:
+        dup = _derived_num(row[1], "duplicates")
+        bad = _derived_num(row[1], "corrupted")
+        ok = dup == 0 and bad == 0
+        out.append(GateResult(
+            gate, ok,
+            f"duplicates={dup if dup is not None else '?'} "
+            f"corrupted={bad if bad is not None else '?'} "
+            f"(need both = 0: a crash may cost throughput, never "
+            f"correctness)"))
+    return out
+
+
+def _check_hedged_tail(rows: Rows) -> List[GateResult]:
+    gate = "hedged tail latency"
+    name = "paged_attention.hedged_tail.hedged"
+    row = rows.get(name)
+    if row is None:
+        return [_missing(gate, name)]
+    limit = THRESHOLDS["hedged_tail.max_p99_ratio"]
+    ratio = _derived_num(row[1], "p99_ratio")
+    if ratio is None:
+        return [GateResult(gate, False,
+                           f"{name}: no p99_ratio= in derived column")]
+    out = [GateResult(gate, ratio <= limit,
+                      f"hedged p99 {ratio:.2f}x unhedged with one slow "
+                      f"replica (need <= {limit}x)")]
+    won = _derived_num(row[1], "hedges_won") or 0
+    out.append(GateResult(
+        gate, won > 0,
+        f"hedges_won={won:.0f} (need > 0: the tail cut must come from "
+        f"an actual rescued attempt)"))
+    return out
+
+
 _CHECKS = (_check_serve_ingest, _check_paged_step,
            lambda rows: _check_speedup_row(
                rows, "paged engine throughput",
                "paged_attention.engine_mixed16.paged", "speedup",
                THRESHOLDS["engine_mixed16.min_speedup"]),
            _check_admission, _check_shared_prefix, _check_spec_decode,
-           _check_overload)
+           _check_overload, _check_failover, _check_hedged_tail)
 
 
 def check(rows: Rows) -> List[GateResult]:

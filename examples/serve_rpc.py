@@ -11,6 +11,10 @@
   7. ResilientChannel: the transport killed mid-InferStream, the client
      reconnects and resumes from its cursor — the caller sees one
      uninterrupted stream
+  8. replica failover: two replicas behind the router front door, the
+     one carrying an InferStream killed mid-flight — the router resumes
+     on the survivor from its cursor watermark, transparently to a
+     PLAIN client channel
 """
 import threading
 import time
@@ -155,6 +159,43 @@ def main() -> None:
           f"{tokens}, reconnects={rc.reconnects}, "
           f"resumed at cursor={resumed_at} (no gaps, no duplicates)")
     rc.close()
+
+    # 8. replica failover: the fault moves from the wire to a whole
+    # replica process.  Two engine replicas (own batchers + KV pools)
+    # sit behind the router; the client is a PLAIN Channel — all the
+    # resilience lives server-side in the front door.
+    from repro.core.rpc import connected_pair
+    from repro.serving import InProcessReplica
+    from repro.serving.router import RouterConfig, build_router_server
+
+    reps = [InProcessReplica(engine, f"replica{i}") for i in range(2)]
+    rserver, router = build_router_server(
+        reps, RouterConfig(health_interval_s=0, hedge=False))
+    ct, st = connected_pair()
+    rserver.serve_transport(st, blocking=False)
+    rch = Channel(ct)
+
+    tokens, failed_over_at = [], None
+    for item in rch.call(isid, raw, server_stream=True):
+        chunk = wire.decode(InferChunk, item.payload)
+        tokens.extend(int(t) for t in
+                      decode_token_page(bytes(bytearray(chunk["page"])))[0])
+        if item.cursor == 2:
+            owner = max(range(len(reps)),
+                        key=lambda i: router.replicas[i].inflight)
+            reps[owner].kill()
+            print(f"[router] {reps[owner].name} killed mid-stream...")
+        if router.stats["stream_failovers"] and failed_over_at is None:
+            failed_over_at = item.cursor
+    stats = router.collect_stats()
+    print(f"[router] stream survived on the survivor: {len(tokens)} tokens "
+          f"{tokens} (no gaps, no duplicates)")
+    print(f"[router] failovers={stats['stream_failovers']:.0f} "
+          f"resumed at cursor={failed_over_at}, "
+          f"breaker_opens={stats['breaker_opens']:.0f}")
+    rch.close()
+    for rep in reps:
+        rep.kill()
 
     ch.close()
     lsock.close()

@@ -544,6 +544,13 @@ class ResilientChannel:
                 self._sleep(p.delay(failures, self._rng))
         return gen()
 
+    # -- observability --------------------------------------------------------
+    def collect_stats(self) -> Dict[str, int]:
+        """Resilience counters, stable key set (dashboards/routers poll
+        this alongside the server's Stats RPC)."""
+        return {"reconnects": self.reconnects, "retries": self.retries,
+                "gaps": self.gaps}
+
     # -- parity helpers (same surface as Channel) -----------------------------
     def typed(self, svc: ServiceDef) -> "TypedClient":
         return TypedClient(self, svc)

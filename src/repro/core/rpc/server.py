@@ -118,6 +118,7 @@ class DedupCache:
         self._entries: "collections.OrderedDict[str, _DedupEntry]" = \
             collections.OrderedDict()
         self.hits = 0
+        self.evictions = 0
 
     def begin(self, key: str):
         """-> ("mine"|"wait"|"done", entry): own it, or join the first try."""
@@ -131,6 +132,7 @@ class DedupCache:
                     if not self._entries[oldest].ready.is_set():
                         break  # never evict an execution in progress
                     del self._entries[oldest]
+                    self.evictions += 1
                 return "mine", e
             self._entries.move_to_end(key)
             self.hits += 1

@@ -5,9 +5,22 @@
 Speaks the full §7 protocol: unary Generate, cursor-resumable Stream,
 batch pipelining (Tokenize -> Generate -> Score in one round trip),
 futures with push-based resolve, deadline propagation, discovery.
+
+With ``--replicas N`` (N > 1) the launcher becomes the replicated tier:
+a :class:`ReplicaSupervisor` spawns N engine subprocesses (each this
+same launcher on an ephemeral port), restarts crashed ones under capped
+``RetryPolicy`` backoff, and the exported port serves the
+``serving/router.py`` front door — health-gated routing, per-replica
+circuit breakers, keyed failover, hedged Infer, prefix affinity.
+SIGHUP triggers a rolling restart (each replica is SIGTERMed, drains,
+and comes back before the next one goes down); SIGTERM/SIGINT drain the
+router and then the replicas.
 """
 import argparse
+import re
 import sys
+import threading
+import time
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -100,11 +113,319 @@ def build_parser() -> argparse.ArgumentParser:
                          "calls (health probes still answer), finishes "
                          "what is in flight up to this long, then closes "
                          "every listener and connection")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="N > 1 serves the replicated tier: N engine "
+                         "subprocesses under a crash-restarting "
+                         "supervisor, fronted by the health-gated "
+                         "failover/hedging router (1 = single process, "
+                         "no router)")
+    ap.add_argument("--hedge", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="hedge Infer calls: fire a second, cancellable "
+                         "attempt on another replica once a call "
+                         "outlives the observed latency quantile; first "
+                         "response wins (--no-hedge to disable)")
+    ap.add_argument("--hedge-delay-ms", type=float, default=50.0,
+                    help="hedging delay before latency history exists "
+                         "(once 16+ calls are observed, the p95 of "
+                         "recent latencies is used instead)")
+    ap.add_argument("--breaker-threshold", type=int, default=3,
+                    help="consecutive transport failures that open a "
+                         "replica's circuit breaker (routing skips an "
+                         "open replica)")
+    ap.add_argument("--breaker-reset-s", type=float, default=5.0,
+                    help="seconds an open breaker waits before letting "
+                         "one half-open probe through")
+    ap.add_argument("--affinity-prefix", type=int, default=64,
+                    help="leading prompt tokens (rounded down to a "
+                         "block multiple) consistently hashed for "
+                         "replica affinity, so shared prefixes hit the "
+                         "same replica's prefix cache (0 = route purely "
+                         "by load)")
+    ap.add_argument("--health-interval-s", type=float, default=1.0,
+                    help="router health-poll period per replica; drain "
+                         "state, inflight and queue depth from these "
+                         "probes gate and score routing")
     return ap
+
+
+class ReplicaSupervisor:
+    """Spawns and babysits N replica processes.
+
+    ``spawn(index)`` returns a process handle exposing ``poll()`` (None
+    while running, exit code after), ``terminate()`` and
+    ``wait(timeout)`` — the subprocess surface, so tests drive the
+    supervisor with stub handles and zero wall clock.  A crashed replica
+    is respawned after a capped :class:`RetryPolicy` backoff keyed to its
+    consecutive-crash count; surviving ``stable_after_s`` resets the
+    count, so a one-off crash does not inherit crash-loop delays.
+    ``rolling_restart()`` takes replicas down one at a time through the
+    graceful SIGTERM drain path.
+    """
+
+    def __init__(self, spawn, count: int, *, policy=None,
+                 stable_after_s: float = 10.0,
+                 poll_interval_s: float = 0.5,
+                 sleep=None, clock=time.monotonic, rng=None,
+                 on_event=None):
+        from ..core.retry import RetryPolicy
+        self._spawn = spawn
+        self.count = count
+        self.policy = policy or RetryPolicy(
+            attempts=8, base_delay=0.5, multiplier=2.0, max_delay=30.0,
+            jitter=0.25)
+        self.stable_after_s = stable_after_s
+        self.poll_interval_s = poll_interval_s
+        self._stop = threading.Event()
+        # default sleep is interruptible so stop() never waits a backoff
+        self._sleep = sleep if sleep is not None else self._stop.wait
+        self._clock = clock
+        self._rng = rng
+        self._on_event = on_event
+        self.handles: list = [None] * count
+        self.failures = [0] * count    # consecutive crashes per slot
+        self._started_at = [0.0] * count
+        self.restarts = 0
+        self._thread = None
+
+    def _event(self, msg: str) -> None:
+        if self._on_event is not None:
+            self._on_event(msg)
+        else:
+            print(f"[supervisor] {msg}", flush=True)
+
+    def start(self) -> None:
+        for i in range(self.count):
+            self.handles[i] = self._spawn(i)
+            self._started_at[i] = self._clock()
+        self._thread = threading.Thread(target=self._monitor, daemon=True,
+                                        name="replica-supervisor")
+        self._thread.start()
+
+    def check(self) -> None:
+        """One monitor pass (the poll loop calls this; tests call it
+        directly)."""
+        for i in range(self.count):
+            h = self.handles[i]
+            if h is None:
+                continue
+            if h.poll() is None:
+                if self.failures[i] and self._clock() - self._started_at[i] \
+                        >= self.stable_after_s:
+                    self.failures[i] = 0   # stayed up: forgive the past
+                continue
+            if self._stop.is_set():
+                return
+            self.failures[i] += 1
+            delay = self.policy.delay(
+                min(self.failures[i], self.policy.attempts), self._rng)
+            self._event(f"replica {i} exited (code {h.poll()}); "
+                        f"restart {self.failures[i]} in {delay:.2f}s")
+            self._sleep(delay)
+            if self._stop.is_set():
+                return
+            try:
+                self.handles[i] = self._spawn(i)
+            except Exception as e:  # noqa: BLE001 - spawn failure = crash
+                self._event(f"replica {i} respawn failed: {e}")
+                continue           # counted again next pass, longer delay
+            self._started_at[i] = self._clock()
+            self.restarts += 1
+
+    def _monitor(self) -> None:
+        while not self._stop.wait(self.poll_interval_s):
+            self.check()
+
+    def rolling_restart(self, *, drain_timeout: float = 30.0) -> None:
+        """Replace every replica one at a time via graceful drain."""
+        for i in range(self.count):
+            h = self.handles[i]
+            if h is not None:
+                h.terminate()          # SIGTERM -> the child drains
+                try:
+                    h.wait(drain_timeout)
+                except Exception:  # noqa: BLE001 - replace it regardless
+                    pass
+            self.handles[i] = self._spawn(i)
+            self._started_at[i] = self._clock()
+            self.restarts += 1
+            self._event(f"replica {i} rolled")
+
+    def stop(self, *, timeout: float = 10.0) -> None:
+        self._stop.set()
+        for h in self.handles:
+            if h is None:
+                continue
+            try:
+                h.terminate()
+                h.wait(timeout)
+            except Exception:  # noqa: BLE001 - already going away
+                pass
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+
+
+#: the line every launcher prints once it is listening; the supervisor
+#: parses the child's ephemeral port out of it
+_SERVING_RE = re.compile(r"bebop-rpc serving .+ on ([\w.\-]+):(\d+)")
+
+
+class _ProcHandle:
+    """Subprocess + the (host, port) parsed from its startup line."""
+
+    def __init__(self, proc, host, port):
+        self.proc = proc
+        self.host = host
+        self.port = port
+
+    def poll(self):
+        return self.proc.poll()
+
+    def terminate(self) -> None:
+        self.proc.terminate()
+
+    def wait(self, timeout=None):
+        return self.proc.wait(timeout=timeout)
+
+
+def _child_argv(args) -> list:
+    """Launcher argv for one engine replica: same flags, ephemeral port."""
+    argv = [sys.executable, "-m", "repro.launch.serve",
+            "--arch", args.arch, "--host", args.host, "--port", "0",
+            "--cache-len", str(args.cache_len),
+            "--max-new-tokens", str(args.max_new_tokens),
+            "--max-batch", str(args.max_batch),
+            "--block-size", str(args.block_size),
+            "--prefill-chunk", str(args.prefill_chunk),
+            "--num-blocks", str(args.num_blocks),
+            "--max-step-tokens", str(args.max_step_tokens),
+            "--prefix-lru-blocks", str(args.prefix_lru_blocks),
+            "--spec-len", str(args.spec_len),
+            "--spec-ngram", str(args.spec_ngram),
+            "--default-priority", str(args.default_priority),
+            "--ttft-slo-ms", str(args.ttft_slo_ms),
+            "--tpot-slo-ms", str(args.tpot_slo_ms),
+            "--slo-adjust-every", str(args.slo_adjust_every),
+            "--drain-timeout", str(args.drain_timeout),
+            "--prefix-cache" if args.prefix_cache else "--no-prefix-cache",
+            "--spec-decode" if args.spec_decode else "--no-spec-decode",
+            "--swap" if args.swap else "--no-swap"]
+    if args.blocking_prefill:
+        argv.append("--blocking-prefill")
+    if args.dense_cache:
+        argv.append("--dense-cache")
+    if args.full:
+        argv.append("--full")
+    return argv
+
+
+def _spawn_child(argv):
+    """Popen a replica, read its startup line for the ephemeral port."""
+    import subprocess
+    proc = subprocess.Popen(argv, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    host = port = None
+    while True:
+        line = proc.stdout.readline()
+        if not line:               # died before listening
+            code = proc.wait()
+            raise RuntimeError(f"replica exited during startup (code {code})")
+        m = _SERVING_RE.search(line)
+        if m:
+            host, port = m.group(1), int(m.group(2))
+            break
+
+    def drain_pipe():              # keep the child's pipe from filling
+        for _ in proc.stdout:
+            pass
+
+    threading.Thread(target=drain_pipe, daemon=True,
+                     name="replica-stdout").start()
+    return _ProcHandle(proc, host, port)
+
+
+def _serve_replicated(args) -> int:
+    from ..core.rpc import TcpTransport
+    from ..serving.router import RouterConfig, build_router_server
+
+    sup = ReplicaSupervisor(lambda i: _spawn_child(_child_argv(args)),
+                            args.replicas)
+    sup.start()
+
+    def make_dial(slot: int):
+        # reads the supervisor's CURRENT handle: after a crash-restart
+        # the replica lives on a fresh ephemeral port, and the next dial
+        # finds it without the router ever being reconfigured
+        def dial():
+            h = sup.handles[slot]
+            if h is None or h.poll() is not None:
+                raise ConnectionError(f"replica {slot} is down")
+            return TcpTransport.connect(h.host, h.port)
+        return dial
+
+    rcfg = RouterConfig(hedge=args.hedge,
+                        hedge_delay_ms=args.hedge_delay_ms,
+                        breaker_threshold=args.breaker_threshold,
+                        breaker_reset_s=args.breaker_reset_s,
+                        affinity_prefix=args.affinity_prefix,
+                        affinity_block=args.block_size,
+                        health_interval_s=args.health_interval_s)
+    server, router = build_router_server(
+        [make_dial(i) for i in range(args.replicas)], rcfg)
+    host, port, lsock = server.listen_tcp(args.host, args.port)
+    print(f"bebop-rpc serving {args.arch} on {host}:{port} "
+          f"(router, {args.replicas} replicas)", flush=True)
+
+    if args.once:
+        import numpy as np
+        from ..core.rpc import Channel
+        from ..serving.service import InferenceService
+        ch = Channel(TcpTransport.connect(host, port))
+        inf = ch.typed(InferenceService)
+        prompt = np.arange(8, dtype=np.uint32) % 32000
+        res = inf.Generate({"tokens": prompt, "batch": 1, "seq_len": 8,
+                            "max_new_tokens": 4}, timeout=120.0)
+        print("probe generated", res["new_tokens"], "tokens via router")
+        ch.close()
+        lsock.close()
+        router.close()
+        sup.stop()
+        return 0
+
+    import signal
+    stop = threading.Event()
+
+    def on_signal(signum, frame):
+        stop.set()
+
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            signal.signal(sig, on_signal)
+        except ValueError:
+            pass
+    try:                           # SIGHUP = rolling restart
+        signal.signal(signal.SIGHUP, lambda s, f: threading.Thread(
+            target=sup.rolling_restart,
+            kwargs={"drain_timeout": args.drain_timeout},
+            daemon=True).start())
+    except (ValueError, AttributeError):
+        pass
+
+    stop.wait()
+    print(f"draining router (timeout {args.drain_timeout:g}s)...",
+          flush=True)
+    completed = server.drain(timeout=args.drain_timeout)
+    router.close()
+    sup.stop(timeout=args.drain_timeout)
+    print("drain complete" if completed
+          else "drain timeout: exiting with calls in flight", flush=True)
+    return 0 if completed else 1
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    if args.replicas > 1:
+        return _serve_replicated(args)
 
     from ..configs import get_config, reduced_config
     from ..serving import Engine, ServeConfig, build_server

@@ -26,12 +26,19 @@ Three layers, one subsystem:
     directions (the host never parses a token) and compose under batch
     pipelining, so prefill->decode->score chains resolve server-side in
     one round trip.
+  * :mod:`.router` — the replicated tier: a Bebop-RPC front door that
+    multiplexes the service across N engine replicas with health-gated
+    routing, per-replica circuit breakers, keyed failover, cursor-resumed
+    stream failover, hedged requests, and prefix-affinity placement.
 """
 from .engine import (ContinuousBatcher, Engine, PagedBatcher,  # noqa: F401
                      ServeConfig, ShedError)
 from .ingest import DecodePlan, IngestResult, PageIngest, PlanCache  # noqa: F401
 from .kv_cache import (BlockAllocator, CacheOOM, PagedKVCache,  # noqa: F401
                        PrefixCache, aligned_block_size, block_keys)
+from .router import (CircuitBreaker, InProcessReplica,  # noqa: F401
+                     Replica, ReplicaRouter, RouterConfig,
+                     build_router_server)
 from .service import (InferenceService, InferenceImpl,  # noqa: F401
                       build_server, decode_token_page, encode_prompt_page)
 from .spec import ngram_propose  # noqa: F401

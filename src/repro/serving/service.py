@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import queue as _queue
 import threading
+import time
 from typing import Dict, Iterator, Optional
 
 import numpy as np
@@ -81,6 +82,9 @@ TokenChunk = T.Message("TokenChunk", [
     T.Field("index", T.UINT32, tag=1),
     T.Field("tokens", T.Array(T.UINT32), tag=2),
     T.Field("logprobs", T.Array(T.BFLOAT16), tag=3),
+    # producing process's epoch: a consumer resuming by cursor checks it
+    # to reject silent resumption into a restarted process (see Health)
+    T.Field("epoch", T.UINT64, tag=4),
 ])
 
 ScoreResponse = T.Message("ScoreResponse", [
@@ -111,6 +115,7 @@ InferResponse = T.Message("InferResponse", [
 InferChunk = T.Message("InferChunk", [
     T.Field("index", T.UINT32, tag=1),
     T.Field("page", T.Array(T.BYTE), tag=2),       # GenRecord1 page
+    T.Field("epoch", T.UINT64, tag=3),             # producing process epoch
 ])
 
 # Scheduler/engine observability: every counter the batcher pre-initializes
@@ -137,6 +142,10 @@ HealthResponse = T.Message("HealthResponse", [
     T.Field("inflight", T.UINT32, tag=3),          # handler tasks running
     T.Field("names", T.STRING, tag=4),             # engine gauges (verbose)
     T.Field("values", T.Array(T.FLOAT64), tag=5),  # aligned with names
+    # per-process start token (monotonic across restarts of a backend):
+    # a changed epoch means stream cursors and dedup state from the old
+    # process are void — routers must not resume against it silently
+    T.Field("epoch", T.UINT64, tag=6),
 ])
 
 InferenceService = ServiceDef("Inference", [
@@ -236,6 +245,11 @@ class InferenceImpl:
                 if engine.serve.paged and engine.supports_paged \
                 else ContinuousBatcher(engine)
         self.batcher = batcher
+        # per-process start token: stamped in Health and in every stream
+        # chunk so a router/client can tell a restarted backend (whose
+        # cursors and dedup state are gone) from a reconnect to the same
+        # process.  time_ns is monotonic across restarts on one host.
+        self.epoch = time.time_ns()
         self._plan_lock = threading.Lock()
         self._known_seqs: Dict[int, bool] = {}
         self._server: Optional[Server] = None
@@ -418,7 +432,8 @@ class InferenceImpl:
         for i, tok in self._token_stream(tokens, maxn,
                                          stop if stop >= 0 else None, ctx):
             ctx.set_cursor(i + 1)
-            yield {"index": i, "page": encode_gen_page(tok)}
+            yield {"index": i, "page": encode_gen_page(tok),
+                   "epoch": self.epoch}
 
     def ScorePage(self, req: dict, ctx: RpcContext) -> dict:
         """Score a token page (chains after Infer via batch pipelining)."""
@@ -461,7 +476,8 @@ class InferenceImpl:
         maxn = int(req.get("max_new_tokens", 16))
         for i, tok in self._token_stream(tokens, maxn, None, ctx):
             ctx.set_cursor(i + 1)  # next frame carries the position marker
-            yield {"index": i, "tokens": tok.reshape(-1).astype(np.uint32)}
+            yield {"index": i, "tokens": tok.reshape(-1).astype(np.uint32),
+                   "epoch": self.epoch}
 
     def Score(self, req: dict, ctx: RpcContext) -> dict:
         tokens = _tokens_2d(req)
@@ -481,6 +497,13 @@ class InferenceImpl:
             else self.batcher.stats)
         stats.update({f"engine_{k}": v for k, v in self.engine.stats.items()})
         stats.update({f"ingest_{k}": v for k, v in self.ingest.stats.items()})
+        if self._server is not None:
+            # RPC-layer resilience counters (PR 7), surfaced end to end:
+            # routers score replicas with them, operators debug with them
+            stats["server_conn_errors"] = self._server.conn_errors
+            stats["server_dedup_hits"] = self._server.dedup.hits
+            stats["server_dedup_evictions"] = self._server.dedup.evictions
+            stats["server_dedup_entries"] = len(self._server.dedup)
         names = sorted(stats)
         return {"names": "\n".join(names),
                 "values": np.asarray([float(stats[n]) for n in names],
@@ -496,7 +519,7 @@ class InferenceImpl:
         draining = bool(self._server is not None and self._server.draining)
         inflight = self._server.inflight if self._server is not None else 0
         out: dict = {"serving": not draining, "draining": draining,
-                     "inflight": inflight}
+                     "inflight": inflight, "epoch": self.epoch}
         if req.get("verbose"):
             gauges: Dict[str, float] = dict(
                 self.batcher.collect_stats()

@@ -222,6 +222,204 @@ def test_unkeyed_disconnect_reclaims_blocks(setup):
     keeper.close()
 
 
+def _router_setup(setup, n=2, **cfg_kw):
+    """N killable in-process replicas (own batchers, shared engine)
+    behind a router server, plus a plain client channel to the router."""
+    from repro.serving import InProcessReplica
+    from repro.serving.router import RouterConfig, build_router_server
+    replicas = [InProcessReplica(setup["engine"], f"rep{i}")
+                for i in range(n)]
+    cfg_kw.setdefault("health_interval_s", 0)   # tests poll manually
+    cfg_kw.setdefault("hedge", False)
+    # the 8-token chaos prompt spans one affinity block at block=8, so
+    # identical prompts pin to one deterministic victim replica
+    cfg_kw.setdefault("affinity_block", 8)
+    cfg_kw.setdefault("affinity_prefix", 8)
+    server, router = build_router_server(replicas, RouterConfig(**cfg_kw))
+    ct, st = connected_pair()
+    server.serve_transport(st, blocking=False)
+    return replicas, router, Channel(ct)
+
+
+def test_router_stream_survives_replica_kill(setup):
+    """Kill the replica carrying an InferStream mid-flight: the client's
+    plain Channel sees the untouched baseline sequence — the router
+    resumes on the survivor from its delivered-cursor watermark."""
+    replicas, router, ch = _router_setup(setup)
+    try:
+        pages, killed = [], []
+        for item in ch.call(setup["sid"], setup["raw"], server_stream=True,
+                            timeout=30.0):
+            chunk = wire.decode(InferChunk, item.payload)
+            pages.append(bytes(bytearray(chunk["page"])))
+            if len(pages) == 2 and not killed:
+                for rep, robj in zip(replicas, router.replicas):
+                    if robj.inflight:
+                        rep.kill()
+                        killed.append(rep.name)
+        assert killed, "no replica was carrying the stream"
+        assert pages == setup["baseline_stream"], \
+            "stream diverged across the replica kill (gap, dup, or " \
+            "wrong tokens)"
+        assert router.stats["stream_failovers"] >= 1
+        survivor = next(r for r in replicas if r.alive)
+        assert _wait_conserved(survivor.impl), "survivor leaked KV blocks"
+    finally:
+        ch.close()
+        router.close()
+        for r in replicas:
+            r.kill()
+
+
+def test_router_infer_exactly_once_across_crash(setup):
+    """Crash the replica executing a keyed Infer: the router resubmits
+    to the survivor under the same key, the client gets exactly one
+    bit-identical result, and a client-keyed retry replays from the
+    router's dedup instead of re-executing."""
+    from repro.core.rpc import IDEMPOTENCY_KEY
+    replicas, router, ch = _router_setup(setup)
+    try:
+        # affinity makes the victim deterministic: the ring owner of the
+        # chaos prompt's first block
+        key = router._affinity_key(setup["raw"])
+        assert key is not None
+        victim_rep = next(router._ring_order(key))
+        victim = replicas[router.replicas.index(victim_rep)]
+        survivor = next(r for r in replicas if r is not victim)
+
+        results: "queue.Queue" = queue.Queue()
+
+        def call():
+            try:
+                results.put(ch.call(InferenceService.method("Infer").id,
+                                    setup["raw"], timeout=30.0))
+            except RpcError as e:
+                results.put(e)
+
+        threading.Thread(target=call, daemon=True).start()
+        deadline = time.monotonic() + 10.0
+        while not victim_rep.inflight and time.monotonic() < deadline:
+            time.sleep(0.002)
+        assert victim_rep.inflight, "victim never received the call"
+        victim.kill()
+        out = results.get(timeout=30.0)
+        assert not isinstance(out, Exception), out
+        res = wire.decode(
+            InferenceService.method("Infer").response, bytes(out))
+        assert bytes(bytearray(res["page"])) == setup["baseline_page"], \
+            "failover produced different tokens"
+        assert router.stats["failovers"] >= 1
+
+        # same logical call, client-keyed, sent twice: the router's own
+        # dedup replays it, the survivor executes once
+        before = survivor.impl.batcher.stats["requests"]
+        md = {IDEMPOTENCY_KEY: "chaos-keyed-1"}
+        r1 = ch.call(InferenceService.method("Infer").id, setup["raw"],
+                     metadata=dict(md), timeout=30.0)
+        r2 = ch.call(InferenceService.method("Infer").id, setup["raw"],
+                     metadata=dict(md), timeout=30.0)
+        assert bytes(r1) == bytes(r2)
+        assert survivor.impl.batcher.stats["requests"] - before == 1
+        assert _wait_conserved(survivor.impl), "survivor leaked KV blocks"
+
+        # the replica's Stats RPC surfaces the resilience counters
+        direct = Channel(survivor.dial())
+        names = direct.typed(InferenceService).Stats({})["names"].split("\n")
+        for k in ("server_conn_errors", "server_dedup_hits",
+                  "server_dedup_evictions", "server_dedup_entries"):
+            assert k in names, f"replica Stats missing {k}"
+        direct.close()
+    finally:
+        ch.close()
+        router.close()
+        for r in replicas:
+            r.kill()
+
+
+# -- replica supervisor (stub processes, zero wall-clock) ---------------------
+
+class _StubProc:
+    def __init__(self):
+        self.exit = None
+        self.terminated = False
+
+    def poll(self):
+        return self.exit
+
+    def terminate(self):
+        self.terminated = True
+        if self.exit is None:
+            self.exit = 0
+
+    def wait(self, timeout=None):
+        return self.exit
+
+
+def _stub_supervisor(count=2, **kw):
+    from repro.launch.serve import ReplicaSupervisor
+    spawned = []
+
+    def spawn(i):
+        h = _StubProc()
+        spawned.append((i, h))
+        return h
+
+    kw.setdefault("policy", RetryPolicy(attempts=3, base_delay=1.0,
+                                        multiplier=2.0, max_delay=8.0,
+                                        jitter=0.0))
+    sleeps = []
+    clk = {"t": 0.0}
+    kw.setdefault("sleep", sleeps.append)
+    kw.setdefault("clock", lambda: clk["t"])
+    kw.setdefault("on_event", lambda msg: None)
+    sup = ReplicaSupervisor(spawn, count, **kw)
+    # seed the slots without starting the monitor thread (tests drive
+    # check() directly, deterministically)
+    for i in range(count):
+        sup.handles[i] = sup._spawn(i)
+        sup._started_at[i] = clk["t"]
+    return sup, spawned, sleeps, clk
+
+
+def test_supervisor_restarts_with_capped_backoff():
+    sup, spawned, sleeps, clk = _stub_supervisor(count=2)
+    n0 = len(spawned)
+    sup.handles[0].exit = 1          # replica 0 crashes
+    sup.check()
+    assert sup.failures == [1, 0] and sup.restarts == 1
+    assert len(spawned) == n0 + 1
+    assert sleeps[-1] == 1.0         # first restart: base delay
+    # crash-loop: delays double, then cap at the policy's attempts index
+    for expected in (2.0, 4.0, 4.0, 4.0):
+        sup.handles[0].exit = 1
+        sup.check()
+        assert sleeps[-1] == expected
+    assert sup.failures[0] == 5
+    # stays up past stable_after_s: the crash history is forgiven
+    clk["t"] += sup.stable_after_s + 1.0
+    sup.check()
+    assert sup.failures[0] == 0
+    sup.handles[0].exit = 1          # next crash is cheap again
+    sup.check()
+    assert sleeps[-1] == 1.0
+
+
+def test_supervisor_rolling_restart_and_stop():
+    sup, spawned, sleeps, clk = _stub_supervisor(count=3)
+    old = list(sup.handles)
+    sup.rolling_restart(drain_timeout=1.0)
+    assert all(h.terminated for h in old)
+    assert all(new is not o for new, o in zip(sup.handles, old))
+    assert sup.restarts == 3
+    # after stop() a crashed replica is NOT respawned
+    n = len(spawned)
+    sup.stop(timeout=0.1)
+    assert all(h.terminated for h in sup.handles)
+    sup.handles[0].exit = 1
+    sup.check()
+    assert len(spawned) == n
+
+
 def test_health_and_drain_complete_inflight(setup):
     """Drain on a dedicated server sharing the engine: Health answers
     while draining, in-flight Infer completes before shutdown."""

@@ -22,6 +22,10 @@ paged_attention.shared_prefix.cached,500.0,speedup=6.00x ttft_p50=1.2ms prefix_h
 paged_attention.spec_decode.on,700.0,tokens_per_s=500.0 speedup=1.80x accept_rate=0.95 spec_proposed=520 spec_accepted=492
 paged_attention.overload.shed_only,60000.0,goodput=3 of 11 reqs at a 0.35x-ref burst deadline
 paged_attention.overload.swap,80000.0,goodput=11 goodput_ratio=3.67x preemptions=4 swapped_blocks=20 swap_ins=4 slo_violations=0
+paged_attention.failover.baseline,900000.0,goodput=20.0 req_per_s completed=18 of 18 (3 replicas no failure)
+paged_attention.failover.killed,1100000.0,goodput_ratio=0.82 completed=18 of 18 duplicates=0 corrupted=0 failovers=5 (one replica killed mid-run)
+paged_attention.hedged_tail.unhedged,550000.0,p50=520.0ms p99=550.0ms one replica behind a 250ms one-way link
+paged_attention.hedged_tail.hedged,120000.0,p99_ratio=0.22 p50=60.0ms p99=120.0ms hedges_fired=6 hedges_won=5
 """
 
 
@@ -93,6 +97,43 @@ def test_overload_no_preemption_fails_even_with_ratio(tmp_path):
     failed = [r for r in results if not r.ok]
     assert len(failed) == 1
     assert "preemptions=0" in failed[0].detail
+
+
+def test_failover_ratio_miss_fails(tmp_path):
+    bad = GOOD_ROWS.replace("goodput_ratio=0.82", "goodput_ratio=0.40")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert failed[0].gate == "failover goodput (replica kill)"
+    assert "0.40" in failed[0].detail and "0.6" in failed[0].detail
+
+
+def test_failover_duplicates_fail_even_with_goodput(tmp_path):
+    bad = GOOD_ROWS.replace("duplicates=0 corrupted=0",
+                            "duplicates=1 corrupted=0")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert "duplicates=1" in failed[0].detail
+
+
+def test_hedged_tail_ratio_miss_fails(tmp_path):
+    bad = GOOD_ROWS.replace("p99_ratio=0.22", "p99_ratio=0.80")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert failed[0].gate == "hedged tail latency"
+    assert "0.80" in failed[0].detail and "0.5" in failed[0].detail
+
+
+def test_hedged_tail_no_wins_fails_even_with_ratio(tmp_path):
+    # a good p99 ratio with zero rescued attempts means the workload
+    # degenerated (e.g. the slow replica was never routed to at all)
+    bad = GOOD_ROWS.replace("hedges_won=5", "hedges_won=0")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert "hedges_won=0" in failed[0].detail
 
 
 def test_error_rows_with_commas_parse_as_derived(tmp_path):
