@@ -1,0 +1,48 @@
+"""Repo-native static analysis: invariants enforced by machine, not vigilance.
+
+The paper's thesis is that invariants enforced *by construction* (fixed
+widths, branchless decode) beat invariants enforced by review.  This
+package applies the same idea to the repo's own Python invariants —
+exception-clause ordering, lock discipline, jit purity, stats-key
+totality — each of which has either already shipped a real bug or is
+one distracted review away from doing so.
+
+    python -m repro.analysis src            # human report, exit 1 on findings
+    python -m repro.analysis --format json src
+    python -m repro.analysis --list-checks
+
+Suppress a deliberate violation on its reported line with::
+
+    except Exception:   # repro: noqa(RPR001) <why this broad catch is right>
+
+Checks (see each module's docstring for the full story):
+
+====== ==================================================================
+RPR001 exception-order: a broad ``except`` before a narrower one makes
+       the narrow handler unreachable (the PR 8 router bug class)
+RPR002 lock-discipline: attributes written under a class's lock must
+       never be written outside it (``# guarded by <lock>`` to annotate)
+RPR003 jit-purity: no traced-value branching, host syncs, or ``print``
+       inside jitted functions / Pallas kernel bodies
+RPR004 stats-keys: every constant ``self.stats[...]`` key must be
+       pre-initialized so ``collect_stats()`` snapshots stay total
+====== ==================================================================
+"""
+from .core import (  # noqa: F401
+    Checker,
+    FileContext,
+    Finding,
+    all_checkers,
+    analyze_paths,
+    analyze_source,
+    get_checker,
+    register,
+)
+
+# importing the checker modules registers them
+from .checkers import exception_order, jit_purity, lock_discipline, stats_keys  # noqa: F401,E501
+
+__all__ = [
+    "Checker", "FileContext", "Finding", "all_checkers", "analyze_paths",
+    "analyze_source", "get_checker", "register",
+]

@@ -1,0 +1,75 @@
+"""CLI: ``python -m repro.analysis [paths]``.
+
+Exit codes: 0 clean, 1 findings (or unparseable files), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from . import all_checkers
+from .core import analyze_paths
+from .reporters import (
+    maybe_write_step_summary,
+    render_human,
+    render_json,
+    render_step_summary,
+)
+
+DEFAULT_CACHE = ".repro-analysis-cache.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-native static checks (RPR001-RPR004). "
+                    "Suppress one finding with '# repro: noqa(CHECK-ID)'.")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to check (default: src)")
+    p.add_argument("--format", choices=("human", "json"), default="human")
+    p.add_argument("--select", metavar="IDS",
+                   help="comma-separated checker ids to run "
+                        "(default: all)")
+    p.add_argument("--cache", metavar="PATH", default=DEFAULT_CACHE,
+                   help=f"per-file result cache (default: {DEFAULT_CACHE})")
+    p.add_argument("--no-cache", action="store_true",
+                   help="analyze every file fresh")
+    p.add_argument("--list-checks", action="store_true",
+                   help="print the registered checks and exit")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    checkers = all_checkers()
+    if args.list_checks:
+        for c in checkers:
+            print(f"{c.id}  {c.name}: {c.invariant}")
+        return 0
+    if args.select:
+        want = {s.strip() for s in args.select.split(",") if s.strip()}
+        unknown = want - {c.id for c in checkers}
+        if unknown:
+            print(f"unknown check id(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+        checkers = [c for c in checkers if c.id in want]
+    results = analyze_paths(
+        args.paths, checkers,
+        cache_path=None if args.no_cache else args.cache)
+    if not results:
+        print(f"no python files under: {', '.join(args.paths)}",
+              file=sys.stderr)
+        return 2
+    if args.format == "json":
+        print(render_json(results))
+    else:
+        print(render_human(results))
+    maybe_write_step_summary(render_step_summary(results, checkers))
+    failed = any(r.findings or r.error for r in results)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+"""The repo's checker suite; importing a module registers its checker."""
+from . import exception_order, jit_purity, lock_discipline, stats_keys  # noqa: F401

@@ -1,0 +1,228 @@
+"""RPR001: an ``except`` clause must not shadow a later, narrower one.
+
+Python tries ``except`` clauses top to bottom and takes the first match,
+so a clause whose class is a *superclass* of a later clause's class makes
+the later handler unreachable — silently.  PR 8 shipped exactly this bug:
+the router's ``except RpcError`` ahead of the retryable
+``TransportError``/``ClientTimeout`` clause swallowed wire failures as
+"the replica said no", marking healthy replicas draining instead of
+tripping the breaker.
+
+The checker resolves handler classes against three layers:
+
+* Python's real builtin exception hierarchy (``issubclass`` over
+  ``builtins``), so ``except Exception`` before ``except ValueError``
+  is caught without any configuration;
+* the repo's own hierarchy (``RpcError``/``TransportError``/
+  ``ClientTimeout``, the Bebop ``DecodeError``/``FramingError`` chain,
+  ``ShedError``, ``CacheOOM``), baked in below;
+* classes and exception-tuple aliases defined *in the analyzed module*
+  (``class _Failover(Exception)``, ``RETRYABLE = (TransportError, ...)``)
+  — including ``self.RETRYABLE``-style references to class attributes.
+
+Unresolvable names are treated as opaque: they can neither prove a later
+clause unreachable nor be proven unreachable themselves (no false
+positives from dynamic types).  A deliberate broad-first ordering is
+suppressed on the broad clause's line::
+
+    except Exception:  # repro: noqa(RPR001) <why>
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from ..core import Checker, FileContext, Finding, dotted_name, last_name, register
+
+# repo class -> direct bases, by bare name.  Keeping this table in the
+# checker (rather than importing the modules) keeps analysis purely
+# syntactic: it runs on any tree, broken imports included.
+REPO_HIERARCHY: Dict[str, Tuple[str, ...]] = {
+    # core/rpc/status.py
+    "RpcError": ("Exception",),
+    "TransportError": ("RpcError",),
+    "ClientTimeout": ("RpcError",),
+    # core/types.py + core/pages.py + core/rpc/framing.py
+    "BebopError": ("Exception",),
+    "EncodeError": ("BebopError",),
+    "DecodeError": ("BebopError",),
+    "SchemaError": ("BebopError",),
+    "FramingError": ("DecodeError",),
+    "PageError": ("BebopError",),
+    # schema toolchain
+    "LexError": ("SchemaError",),
+    "ParseError": ("SchemaError",),
+    "CompileError": ("SchemaError",),
+    "DecoratorError": ("SchemaError",),
+    "LuaError": ("DecoratorError",),
+    # serving
+    "ShedError": ("RuntimeError",),
+    "CacheOOM": ("RuntimeError",),
+    # stdlib classes the tree names in except clauses (resolution is by
+    # trailing name, so `queue.Empty` lands on "Empty")
+    "Empty": ("Exception",),
+    "Full": ("Exception",),
+    "timeout": ("TimeoutError",),   # socket.timeout alias
+}
+
+# exception-tuple aliases whose definitions live in another module than
+# their uses (client.py's RETRYABLE is re-exported via ReplicaRouter)
+KNOWN_ALIASES: Dict[str, Tuple[str, ...]] = {
+    "RETRYABLE": ("TransportError", "ClientTimeout",
+                  "ConnectionError", "OSError"),
+}
+
+
+def _builtin_exc(name: str) -> Optional[type]:
+    obj = getattr(builtins, name, None)
+    if isinstance(obj, type) and issubclass(obj, BaseException):
+        return obj
+    return None
+
+
+class _Resolver:
+    """Maps handler type expressions to sets of ancestor names."""
+
+    def __init__(self, tree: ast.Module):
+        self.local_bases: Dict[str, Tuple[str, ...]] = {}
+        self.aliases: Dict[str, Tuple[str, ...]] = dict(KNOWN_ALIASES)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                bases = tuple(n for n in (last_name(b) for b in node.bases)
+                              if n is not None)
+                self.local_bases[node.name] = bases
+                for stmt in node.body:
+                    self._maybe_alias(stmt)
+        for stmt in tree.body:
+            self._maybe_alias(stmt)
+
+    def _maybe_alias(self, stmt: ast.AST) -> None:
+        """Record ``NAME = (Exc, Exc, ...)`` and ``NAME = Other.NAME``."""
+        if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+            return
+        name = last_name(stmt.targets[0])
+        if name is None:
+            return
+        if isinstance(stmt.value, ast.Tuple):
+            elts = [last_name(e) for e in stmt.value.elts]
+            if all(e is not None for e in elts):
+                self.aliases[name] = tuple(elts)  # type: ignore[arg-type]
+        elif isinstance(stmt.value, ast.Attribute):
+            src = stmt.value.attr
+            if src in self.aliases and name not in self.aliases:
+                self.aliases[name] = self.aliases[src]
+
+    def ancestors(self, name: str) -> Optional[Set[str]]:
+        """All ancestor class names of ``name`` (inclusive); None if the
+        name cannot be resolved to an exception class."""
+        out: Set[str] = set()
+        stack = [name]
+        while stack:
+            n = stack.pop()
+            if n in out:
+                continue
+            b = _builtin_exc(n)
+            if b is not None:
+                out.update(k.__name__ for k in b.__mro__
+                           if issubclass(k, BaseException))
+                continue
+            bases = self.local_bases.get(n) or REPO_HIERARCHY.get(n)
+            if bases is None:
+                return None
+            out.add(n)
+            stack.extend(bases)
+        return out
+
+    def classes_of(self, type_expr: Optional[ast.expr]) -> Optional[
+            List[str]]:
+        """Handler type expression -> class names; None if opaque.
+
+        A bare ``except:`` resolves to BaseException.  A tuple resolves
+        element-wise; any opaque element makes the whole clause opaque.
+        """
+        if type_expr is None:
+            return ["BaseException"]
+        if isinstance(type_expr, ast.Tuple):
+            out: List[str] = []
+            for e in type_expr.elts:
+                sub = self.classes_of(e)
+                if sub is None:
+                    return None
+                out.extend(sub)
+            return out
+        name = last_name(type_expr)
+        if name is None:
+            return None
+        # alias (RETRYABLE-style tuple) — by bare name or dotted tail
+        if name in self.aliases:
+            return list(self.aliases[name])
+        if self.ancestors(name) is not None:
+            return [name]
+        return None
+
+
+@register
+class ExceptionOrderChecker(Checker):
+    id = "RPR001"
+    name = "exception-order"
+    invariant = ("every ``except`` clause is reachable: no clause names a "
+                 "superclass of a later clause's class")
+    motivation = ("PR 8: ``except RpcError`` ahead of the retryable "
+                  "TransportError/ClientTimeout clause swallowed wire "
+                  "failures as application errors")
+    version = 1
+
+    def run(self, ctx: FileContext) -> Iterator[Finding]:
+        resolver = _Resolver(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Try):
+                yield from self._check_handlers(ctx, resolver, node.handlers)
+
+    def _check_handlers(self, ctx: FileContext, resolver: _Resolver,
+                        handlers: Sequence[ast.ExceptHandler],
+                        ) -> Iterator[Finding]:
+        # earlier clauses' classes, with their ancestor sets
+        seen: List[Tuple[str, Set[str], ast.ExceptHandler]] = []
+        for h in handlers:
+            classes = resolver.classes_of(h.type)
+            if classes is None:
+                # opaque clause: catches *something*; later clauses stay
+                # reachable as far as we can prove, and we cannot prove
+                # this one dead either
+                continue
+            dead_via: Optional[Tuple[str, str, ast.ExceptHandler]] = None
+            for cls_name in classes:
+                anc = resolver.ancestors(cls_name)
+                if anc is None:
+                    continue
+                if dead_via is None:
+                    for earlier_name, _, earlier_h in seen:
+                        if earlier_name in anc:
+                            dead_via = (earlier_name, cls_name, earlier_h)
+                            break
+                seen.append((cls_name, anc, h))
+            if dead_via is not None:
+                earlier_name, cls_name, earlier_h = dead_via
+                what = "duplicates" if earlier_name == cls_name \
+                    else f"already catches subclass {cls_name}"
+                # a multi-class clause may keep other live arms; name
+                # the dead arm precisely either way
+                scope = "except clause" if len(classes) == 1 \
+                    else f"clause's {cls_name} arm"
+                yield Finding(
+                    path=ctx.path,
+                    line=earlier_h.lineno,
+                    col=earlier_h.col_offset,
+                    check_id=self.id,
+                    message=(
+                        f"except {earlier_name} {what}: the later "
+                        f"{scope} at line {h.lineno} is unreachable — "
+                        f"order handlers narrowest-first"),
+                )
+
+    @staticmethod
+    def _describe(expr: Optional[ast.expr]) -> str:
+        if expr is None:
+            return "<bare>"
+        return dotted_name(expr) or ast.dump(expr)

@@ -1,0 +1,290 @@
+"""RPR003: no host syncs, traced-value branching, or ``print`` in jit.
+
+A function that runs under ``jax.jit`` (or as a Pallas kernel body) is
+traced: Python ``if``/``while`` on a traced value raises a
+ConcretizationTypeError at best and silently bakes in one branch at
+worst; ``.item()``/``float()``/``int()``/``np.asarray`` force a
+device->host sync that breaks async dispatch; ``print`` fires at trace
+time, not run time.  The serving hot path (the batcher's jitted step
+functions, the Pallas decode/prefill kernels) must stay free of all of
+these — the throughput numbers depend on it.
+
+Pure zones are discovered per module:
+
+* functions decorated with ``jax.jit`` / ``functools.partial(jax.jit,
+  ...)`` (``static_argnames`` are honored: branching on a static arg is
+  fine — it is a Python value at trace time);
+* local functions passed to a ``jax.jit(...)`` call or as the first
+  argument of ``pl.pallas_call(...)``;
+* functions annotated ``# repro: jit-pure`` on their ``def`` line —
+  the marker used for the model step functions the batcher jits from
+  another module (``paged_step``/``paged_step_verify``/``decode_step``).
+  ``# repro: jit-pure(static=a,b)`` names static parameters.
+
+Taintedness is lexical: parameters (minus statics) are traced; anything
+assigned from a traced expression is traced; ``.shape``/``.ndim``/
+``.dtype``/``.size``/``len()`` stop taint (they are static under
+tracing), and so do ``x is None`` tests (a tracer is never None).
+Suppress a deliberate sync with ``# repro: noqa(RPR003) <why>``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple, Union
+
+from ..core import Checker, FileContext, Finding, dotted_name, last_name, register
+
+_MARKER_RE = re.compile(r"#\s*repro:\s*jit-pure(?:\(static=([\w, ]*)\))?")
+
+# attribute reads that yield static (Python) values under tracing
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+# calls that yield static values regardless of argument taint
+_STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "getattr"}
+# calls that force a host sync when handed a traced value
+_SYNC_CALLS = {"float", "int", "bool", "complex"}
+# numpy entry points that pull a traced array to host
+_HOST_NUMPY = {"asarray", "array", "ascontiguousarray", "asnumpy"}
+
+_FnNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+
+
+def _partial_jit_statics(deco: ast.expr) -> Optional[Set[str]]:
+    """``functools.partial(jax.jit, static_argnames=(...))`` -> statics;
+    plain ``jax.jit`` -> empty set; anything else -> None."""
+    if dotted_name(deco) in ("jax.jit", "jit"):
+        return set()
+    if isinstance(deco, ast.Call):
+        fn = dotted_name(deco.func)
+        if fn in ("jax.jit", "jit"):
+            return _statics_from_call(deco)
+        if fn in ("functools.partial", "partial") and deco.args and \
+                dotted_name(deco.args[0]) in ("jax.jit", "jit"):
+            return _statics_from_call(deco)
+    return None
+
+
+def _statics_from_call(call: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and \
+                        isinstance(node.value, str):
+                    out.add(node.value)
+    return out
+
+
+def _partial_target(call: ast.expr) -> Optional[Tuple[str, Set[str]]]:
+    """``functools.partial(f, kw=...)`` -> (f's name, bound kw names).
+
+    Keywords bound by a partial are Python values at trace time, so
+    they are static parameters of the wrapped kernel.
+    """
+    if not isinstance(call, ast.Call):
+        return None
+    if dotted_name(call.func) not in ("functools.partial", "partial"):
+        return None
+    if not call.args:
+        return None
+    name = last_name(call.args[0])
+    if name is None:
+        return None
+    return name, {kw.arg for kw in call.keywords if kw.arg is not None}
+
+
+def _collect_zones(ctx: FileContext) -> List[Tuple[_FnNode, Set[str]]]:
+    """(function node, static parameter names) for every pure zone."""
+    fns: Dict[str, List[_FnNode]] = {}
+    zones: Dict[int, Tuple[_FnNode, Set[str]]] = {}
+    # name -> (wrapped fn name, partial-bound static kw names), from
+    # `kernel = functools.partial(_kernel_fn, scale=..., ...)` bindings
+    partials: Dict[str, Tuple[str, Set[str]]] = {}
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fns.setdefault(node.name, []).append(node)
+            # decorator zone
+            for deco in node.decorator_list:
+                statics = _partial_jit_statics(deco)
+                if statics is not None:
+                    zones[id(node)] = (node, statics)
+            # marker-comment zone
+            m = _MARKER_RE.search(ctx.line_comment(node.lineno))
+            if m:
+                statics = {s.strip() for s in (m.group(1) or "").split(",")
+                           if s.strip()}
+                zones[id(node)] = (node, statics)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            tgt = _partial_target(node.value)
+            if tgt is not None:
+                partials[node.targets[0].id] = tgt
+
+    def resolve(expr: ast.expr, extra_statics: Set[str]) -> None:
+        """Mark the function behind ``expr`` (a Name, a partial alias, or
+        an inline functools.partial call) as a pure zone."""
+        name: Optional[str] = None
+        statics = set(extra_statics)
+        if isinstance(expr, ast.Name):
+            if expr.id in partials:
+                name, bound = partials[expr.id]
+                statics |= bound
+            else:
+                name = expr.id
+        else:
+            tgt = _partial_target(expr)
+            if tgt is not None:
+                name, bound = tgt
+                statics |= bound
+        if name is None:
+            return
+        for cand in fns.get(name, []):
+            zones.setdefault(id(cand), (cand, statics))
+
+    # call-site zones: jax.jit(f, ...) and pl.pallas_call(f, ...)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn_name = dotted_name(node.func)
+        if fn_name in ("jax.jit", "jit") and node.args:
+            resolve(node.args[0], _statics_from_call(node))
+        elif fn_name is not None and \
+                fn_name.split(".")[-1] == "pallas_call" and node.args:
+            resolve(node.args[0], set())
+    return list(zones.values())
+
+
+def _param_names(fn: _FnNode) -> List[str]:
+    # *args / **kwargs are PYTHON containers (tuples/dicts of tracers):
+    # iterating or len()-ing them is static-length unrolling, the normal
+    # Pallas idiom for `*o_refs` output refs — so they carry no taint
+    # themselves (their elements do only when bound via subscript of a
+    # traced expression, which taint propagation already covers)
+    args = fn.args
+    return [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+
+
+class _TaintChecker:
+    """One pure zone: propagate taint, flag impure constructs."""
+
+    def __init__(self, checker: "JitPurityChecker", ctx: FileContext,
+                 fn: _FnNode, statics: Set[str]):
+        self.checker = checker
+        self.ctx = ctx
+        self.fn = fn
+        self.tainted: Set[str] = {n for n in _param_names(fn)
+                                  if n not in statics and n != "self"}
+        self.findings: List[Finding] = []
+
+    # -- taint rules ---------------------------------------------------------
+    def is_tainted(self, node: ast.AST) -> bool:
+        """Does evaluating ``node`` touch a traced value's *data*?"""
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False          # static under tracing
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            fn = last_name(node.func)
+            if fn in _STATIC_CALLS:
+                return False
+            return any(self.is_tainted(a) for a in node.args) or \
+                any(self.is_tainted(k.value) for k in node.keywords) or \
+                (isinstance(node.func, ast.Attribute)
+                 and self.is_tainted(node.func.value))
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None`: never concretizes a tracer
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                   for op in node.ops) and \
+                    all(isinstance(c, ast.Constant) and c.value is None
+                        for c in node.comparators):
+                return False
+            return self.is_tainted(node.left) or \
+                any(self.is_tainted(c) for c in node.comparators)
+        for child in ast.iter_child_nodes(node):
+            if self.is_tainted(child):
+                return True
+        return False
+
+    def _bind(self, target: ast.expr, tainted: bool) -> None:
+        for node in ast.walk(target):
+            if isinstance(node, ast.Name):
+                if tainted:
+                    self.tainted.add(node.id)
+                else:
+                    self.tainted.discard(node.id)
+
+    # -- the walk ------------------------------------------------------------
+    def check(self) -> List[Finding]:
+        for stmt in self.fn.body:
+            self._visit(stmt)
+        return self.findings
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.findings.append(Finding(
+            path=self.ctx.path, line=node.lineno, col=node.col_offset,
+            check_id=self.checker.id,
+            message=f"{what} inside jit-pure zone "
+                    f"'{self.fn.name}' (line {self.fn.lineno})"))
+
+    def _visit(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.If, ast.While)):
+            if self.is_tainted(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                self._flag(node, f"python `{kind}` on a traced value "
+                                 f"(use jnp.where / lax.cond / lax.select)")
+        elif isinstance(node, ast.For):
+            if self.is_tainted(node.iter):
+                self._flag(node, "python `for` over a traced value "
+                                 "(use lax.scan / lax.fori_loop)")
+            self._bind(node.target, self.is_tainted(node.iter))
+        elif isinstance(node, ast.Assign):
+            t = self.is_tainted(node.value)
+            for tgt in node.targets:
+                self._bind(tgt, t)
+        elif isinstance(node, ast.AugAssign):
+            if self.is_tainted(node.value):
+                self._bind(node.target, True)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._bind(node.target, self.is_tainted(node.value))
+        elif isinstance(node, ast.Call):
+            self._visit_call(node)
+        if not isinstance(node, ast.Call):
+            for child in ast.iter_child_nodes(node):
+                self._visit(child)
+
+    def _visit_call(self, node: ast.Call) -> None:
+        fn_dotted = dotted_name(node.func) or ""
+        fn = last_name(node.func)
+        if fn == "print":
+            self._flag(node, "`print` (trace-time only; use "
+                             "jax.debug.print)")
+        elif fn == "item" and isinstance(node.func, ast.Attribute):
+            self._flag(node, "`.item()` host sync")
+        elif fn in _SYNC_CALLS and any(self.is_tainted(a)
+                                       for a in node.args):
+            self._flag(node, f"`{fn}()` on a traced value (host sync)")
+        elif fn in _HOST_NUMPY and fn_dotted.startswith(("np.", "numpy.")) \
+                and any(self.is_tainted(a) for a in node.args):
+            self._flag(node, f"`{fn_dotted}()` on a traced value "
+                             f"(device->host transfer)")
+        for child in ast.iter_child_nodes(node):
+            self._visit(child)
+
+
+@register
+class JitPurityChecker(Checker):
+    id = "RPR003"
+    name = "jit-purity"
+    invariant = ("jitted functions and Pallas kernel bodies contain no "
+                 "traced-value branching, host syncs, or prints")
+    motivation = ("one `.item()` in a jitted step serializes the whole "
+                  "async dispatch pipeline; a traced `if` bakes in a "
+                  "branch for every batch")
+    version = 1
+
+    def run(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn, statics in _collect_zones(ctx):
+            yield from _TaintChecker(self, ctx, fn, statics).check()

@@ -1,0 +1,207 @@
+"""RPR002: attributes written under a class's lock stay under that lock.
+
+The batcher/router/client/server classes all follow the same shape: a
+``threading.Lock``/``Condition`` created in ``__init__`` guards a set of
+mutable attributes, and every mutation happens inside ``with
+self._lock:``.  That discipline is only as strong as the next reviewer's
+attention — this checker makes it structural.
+
+An attribute is considered *guarded* by lock ``L`` when either:
+
+* any method other than ``__init__`` writes it inside ``with self.L:``
+  (discipline is inferred from the code's own majority behavior), or
+* its assignment carries an explicit ``# guarded by L`` annotation::
+
+      self._queue = deque()   # guarded by _cond
+
+Every write to a guarded attribute outside a ``with self.L:`` block is a
+finding, except in ``__init__`` (construction happens before the object
+is shared between threads).  Methods documented as running with the lock
+already held are exempted by convention: a name ending in ``_locked`` or
+a docstring containing "caller holds" / "caller must hold".
+
+False-positive escape hatch: ``# repro: noqa(RPR002) <why>`` on the
+write's line (e.g. single-writer-thread counters).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..core import (
+    Checker,
+    FileContext,
+    Finding,
+    assign_targets,
+    iter_class_methods,
+    iter_classes,
+    last_name,
+    register,
+    self_attr,
+)
+
+_GUARDED_RE = re.compile(r"#\s*guarded by\s+(?:self\.)?(\w+)")
+_CALLER_HOLDS_RE = re.compile(r"caller (?:must hold|holds)", re.IGNORECASE)
+
+# attribute types that count as locks when assigned in the class body
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition"}
+
+
+def _lock_attrs(cls: ast.ClassDef) -> Set[str]:
+    """Attributes assigned ``threading.Lock()``/``RLock()``/``Condition()``
+    (or the analysis OrderedLock) anywhere in the class."""
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        for tgt in assign_targets(node):
+            attr = self_attr(tgt)
+            if attr is None:
+                continue
+            value = getattr(node, "value", None)
+            if isinstance(value, ast.Call):
+                fn = last_name(value.func)
+                if fn in _LOCK_FACTORIES or fn == "OrderedLock":
+                    out.add(attr)
+    return out
+
+
+class _Write:
+    __slots__ = ("attr", "method", "line", "col", "held", "exempt")
+
+    def __init__(self, attr: str, method: str, line: int, col: int,
+                 held: Tuple[str, ...], exempt: bool):
+        self.attr = attr
+        self.method = method
+        self.line = line
+        self.col = col
+        self.held = held          # lock attrs held at this write
+        self.exempt = exempt      # __init__ / *_locked / "caller holds"
+
+
+class _MethodWalker(ast.NodeVisitor):
+    """Collects self-attribute writes with the lexical with-lock stack."""
+
+    def __init__(self, locks: Set[str], method: str, exempt: bool):
+        self.locks = locks
+        self.method = method
+        self.exempt = exempt
+        self.held: List[str] = []
+        self.writes: List[_Write] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        entered: List[str] = []
+        for item in node.items:
+            attr = self_attr(item.context_expr)
+            if attr is not None and attr in self.locks:
+                entered.append(attr)
+        self.held.extend(entered)
+        self.generic_visit(node)
+        for _ in entered:
+            self.held.pop()
+
+    visit_AsyncWith = visit_With  # same shape
+
+    def _record(self, target: ast.expr) -> None:
+        attr = self_attr(target)
+        if attr is None or attr in self.locks:
+            return
+        self.writes.append(_Write(attr, self.method, target.lineno,
+                                  target.col_offset, tuple(self.held),
+                                  self.exempt))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            self._record(tgt)
+            if isinstance(tgt, ast.Tuple):
+                for e in tgt.elts:
+                    self._record(e)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record(node.target)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record(node.target)
+        self.generic_visit(node)
+
+    # nested defs (worker closures) run on other threads but share the
+    # lexical lock stack only if the ``with`` wraps the def's *call*,
+    # which we cannot see — so analyze their bodies with an EMPTY stack:
+    # writes inside a closure must take the lock themselves.
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        inner = _MethodWalker(self.locks, self.method, self.exempt)
+        for stmt in node.body:
+            inner.visit(stmt)
+        self.writes.extend(inner.writes)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = lambda self, node: None  # noqa: E731 - no statements inside
+
+
+def _method_exempt(fn) -> bool:
+    if fn.name == "__init__" or fn.name.endswith("_locked"):
+        return True
+    doc = ast.get_docstring(fn) or ""
+    return bool(_CALLER_HOLDS_RE.search(doc))
+
+
+@register
+class LockDisciplineChecker(Checker):
+    id = "RPR002"
+    name = "lock-discipline"
+    invariant = ("an attribute written under ``with self.<lock>`` in any "
+                 "method is written under that lock everywhere outside "
+                 "``__init__``")
+    motivation = ("the batcher/router/client/server lock sites are pure "
+                  "convention; one unguarded write is a silent race")
+    version = 1
+
+    def run(self, ctx: FileContext) -> Iterator[Finding]:
+        for cls in iter_classes(ctx.tree):
+            yield from self._check_class(ctx, cls)
+
+    def _check_class(self, ctx: FileContext,
+                     cls: ast.ClassDef) -> Iterator[Finding]:
+        locks = _lock_attrs(cls)
+        if not locks:
+            return
+        writes: List[_Write] = []
+        for fn in iter_class_methods(cls):
+            walker = _MethodWalker(locks, fn.name, _method_exempt(fn))
+            for stmt in fn.body:
+                walker.visit(stmt)
+            writes.extend(walker.writes)
+
+        # explicit annotations win; otherwise infer from guarded writes
+        guard: Dict[str, str] = {}
+        annotated: Set[str] = set()
+        for w in writes:
+            m = _GUARDED_RE.search(ctx.line_comment(w.line))
+            if m and m.group(1) in locks:
+                guard[w.attr] = m.group(1)
+                annotated.add(w.attr)
+        for w in writes:
+            if w.attr in annotated or w.exempt or not w.held:
+                continue
+            # first guarded write wins; a second lock guarding the same
+            # attribute would itself be a discipline smell, but flagging
+            # it here would double-report — the outside-write findings
+            # below already surface the inconsistency
+            guard.setdefault(w.attr, w.held[-1])
+
+        for w in writes:
+            lock = guard.get(w.attr)
+            if lock is None or w.exempt or lock in w.held:
+                continue
+            yield Finding(
+                path=ctx.path, line=w.line, col=w.col, check_id=self.id,
+                message=(
+                    f"{cls.name}.{w.attr} is guarded by self.{lock} "
+                    f"elsewhere in this class but written here "
+                    f"({w.method}) without holding it — annotate the "
+                    f"canonical assignment with '# guarded by {lock}' "
+                    f"and take the lock, or suppress a deliberate "
+                    f"single-writer site"),
+            )

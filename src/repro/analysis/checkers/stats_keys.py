@@ -1,0 +1,102 @@
+"""RPR004: every constant ``self.stats[...]`` key is pre-initialized.
+
+PR 6 established the convention: a class exposing a ``stats`` counter
+dict initializes *every* key it will ever touch up front, so
+``collect_stats()`` snapshots are total — dashboards and tests can rely
+on key presence before the first increment, and a typo'd key shows up
+as a checker finding instead of a phantom counter that never moves (or
+a ``KeyError`` on the first increment of a ``+=`` key).
+
+The checker finds each class's ``self.stats = { ...literal... }``
+assignment and flags any other constant-keyed subscript of
+``self.stats`` (read or write) whose key is missing from that literal.
+Classes whose ``stats`` dict is not a plain literal of constant keys
+(merged/derived dicts) are skipped — the convention only binds the
+counter-dict shape.  Suppress with ``# repro: noqa(RPR004) <why>``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from ..core import Checker, FileContext, Finding, iter_classes, register, self_attr
+
+_ATTR = "stats"
+
+
+def _literal_keys(value: ast.expr) -> Optional[Set[str]]:
+    """``{"a": 0, "b": 0}`` -> {"a", "b"}; None if not a constant-keyed
+    dict literal (including ``**spread`` entries)."""
+    if not isinstance(value, ast.Dict):
+        return None
+    keys: Set[str] = set()
+    for k in value.keys:
+        if isinstance(k, ast.Constant) and isinstance(k.value, str):
+            keys.add(k.value)
+        else:
+            return None
+    return keys
+
+
+@register
+class StatsKeysChecker(Checker):
+    id = "RPR004"
+    name = "stats-keys"
+    invariant = ("every constant key used with ``self.stats[...]`` in a "
+                 "class appears in that class's ``self.stats = {...}`` "
+                 "pre-initialization literal")
+    motivation = ("PR 6: keys used to appear on first touch, so "
+                  "``collect_stats()`` snapshots were partial until the "
+                  "counter first moved — and a typo'd key was invisible")
+    version = 1
+
+    def run(self, ctx: FileContext) -> Iterator[Finding]:
+        for cls in iter_classes(ctx.tree):
+            yield from self._check_class(ctx, cls)
+
+    def _check_class(self, ctx: FileContext,
+                     cls: ast.ClassDef) -> Iterator[Finding]:
+        init_keys: Optional[Set[str]] = None
+        init_line = 0
+        assigns: List[ast.Assign] = []
+        # own the class body only: a nested class's stats dict is that
+        # class's contract, not this one's
+        nested = {id(n) for c in ast.walk(cls)
+                  if isinstance(c, ast.ClassDef) and c is not cls
+                  for n in ast.walk(c)}
+        for node in ast.walk(cls):
+            if id(node) in nested:
+                continue
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and self_attr(node.targets[0]) == _ATTR:
+                assigns.append(node)
+        for node in assigns:
+            keys = _literal_keys(node.value)
+            if keys is None:
+                return  # merged/derived stats dict: convention not in force
+            if init_keys is None:
+                init_keys = keys
+                init_line = node.lineno
+            else:
+                init_keys |= keys
+        if init_keys is None:
+            return
+        for node in ast.walk(cls):
+            if id(node) in nested or not isinstance(node, ast.Subscript):
+                continue
+            if self_attr(node.value) != _ATTR:
+                continue
+            key = node.slice
+            if not (isinstance(key, ast.Constant)
+                    and isinstance(key.value, str)):
+                continue  # dynamic key: out of scope
+            if key.value not in init_keys:
+                yield Finding(
+                    path=ctx.path, line=node.lineno, col=node.col_offset,
+                    check_id=self.id,
+                    message=(
+                        f"stats key '{key.value}' is not in "
+                        f"{cls.name}'s pre-initialization dict (line "
+                        f"{init_line}) — add it there so "
+                        f"collect_stats() snapshots stay total"),
+                )

@@ -1,0 +1,314 @@
+"""Checker framework: file walking, suppression, caching, registration.
+
+A :class:`Checker` gets one parsed file (:class:`FileContext`: source,
+AST, comment map) and yields :class:`Finding`\\ s.  The framework owns
+everything around that: discovering ``.py`` files, parsing once per
+file, applying ``# repro: noqa(CHECK-ID)`` suppressions, and caching
+per-file results keyed on content hash + suite fingerprint so repeated
+local runs only re-analyze what changed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import os
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Type
+
+# bump when framework behavior changes in a way that invalidates caches
+FRAMEWORK_VERSION = 1
+
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\(([A-Z0-9, ]+)\)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One violation, pinpointed.  Sorts by (path, line, col, check)."""
+
+    path: str
+    line: int
+    col: int
+    check_id: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: " \
+               f"{self.check_id} {self.message}"
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "Finding":
+        return cls(path=str(d["path"]), line=int(d["line"]),  # type: ignore[arg-type]
+                   col=int(d["col"]), check_id=str(d["check_id"]),  # type: ignore[arg-type]
+                   message=str(d["message"]))
+
+
+class FileContext:
+    """One parsed file, shared by every checker that runs over it."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        # line -> set of suppressed check ids on that physical line
+        self.noqa: Dict[int, set] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _NOQA_RE.search(text)
+            if m:
+                ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+                self.noqa[i] = ids
+
+    def line_text(self, lineno: int) -> str:
+        """1-indexed physical line (empty string past EOF)."""
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def line_comment(self, lineno: int) -> str:
+        """The trailing ``#`` comment on a physical line ('' if none)."""
+        text = self.line_text(lineno)
+        # good enough for this repo: no '#' inside string literals on
+        # annotated lines (annotations are a convention, not syntax)
+        idx = text.find("#")
+        return text[idx:] if idx >= 0 else ""
+
+    def suppressed(self, finding: Finding) -> bool:
+        return finding.check_id in self.noqa.get(finding.line, ())
+
+
+class Checker:
+    """Base class: subclass, set the class attributes, implement run().
+
+    ``version`` participates in the cache fingerprint — bump it whenever
+    the checker's behavior changes so stale cached results die.
+    """
+
+    id: str = ""
+    name: str = ""
+    invariant: str = ""      # one-line statement of what must hold
+    motivation: str = ""     # which real bug / bug class motivates it
+    version: int = 1
+
+    def run(self, ctx: FileContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Type[Checker]] = {}
+
+
+def register(cls: Type[Checker]) -> Type[Checker]:
+    """Class decorator: add a checker to the suite."""
+    if not cls.id:
+        raise ValueError(f"checker {cls.__name__} has no id")
+    if cls.id in _REGISTRY and _REGISTRY[cls.id] is not cls:
+        raise ValueError(f"duplicate checker id {cls.id}")
+    _REGISTRY[cls.id] = cls
+    return cls
+
+
+def all_checkers() -> List[Type[Checker]]:
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def get_checker(check_id: str) -> Type[Checker]:
+    return _REGISTRY[check_id]
+
+
+def suite_fingerprint(checkers: Sequence[Type[Checker]]) -> str:
+    parts = [f"framework:{FRAMEWORK_VERSION}"]
+    parts += sorted(f"{c.id}:{c.version}" for c in checkers)
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
+
+
+# -- analysis entry points ---------------------------------------------------
+
+@dataclasses.dataclass
+class FileResult:
+    path: str
+    findings: List[Finding]
+    suppressed: int
+    error: Optional[str] = None   # syntax/read error, reported not raised
+    cached: bool = False
+
+
+def analyze_source(source: str, path: str = "<string>",
+                   checkers: Optional[Sequence[Type[Checker]]] = None,
+                   ) -> FileResult:
+    """Analyze one source string (the unit tests' entry point)."""
+    checkers = all_checkers() if checkers is None else checkers
+    try:
+        ctx = FileContext(path, source)
+    except SyntaxError as e:
+        return FileResult(path, [], 0, error=f"syntax error: {e}")
+    findings: List[Finding] = []
+    suppressed = 0
+    for cls in checkers:
+        for f in cls().run(ctx):
+            if ctx.suppressed(f):
+                suppressed += 1
+            else:
+                findings.append(f)
+    findings.sort()
+    return FileResult(path, findings, suppressed)
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[str]:
+    """Expand files/directories into sorted .py paths (skips hidden dirs
+    and ``__pycache__``)."""
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".") and d != "__pycache__")
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    yield os.path.join(root, name)
+
+
+class Cache:
+    """Per-file result cache: content hash + suite fingerprint -> findings.
+
+    Stored as one JSON file.  A missing/corrupt cache never fails a run;
+    it just means a cold start.
+    """
+
+    def __init__(self, path: str, fingerprint: str):
+        self.path = path
+        self.fingerprint = fingerprint
+        self._data: Dict[str, Dict[str, object]] = {}
+        self._dirty = False
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+            if blob.get("fingerprint") == fingerprint:
+                self._data = blob.get("files", {})
+        except (OSError, ValueError):
+            pass
+
+    @staticmethod
+    def digest(source: str) -> str:
+        return hashlib.sha256(source.encode()).hexdigest()[:24]
+
+    def get(self, path: str, source: str) -> Optional[Tuple[List[Finding],
+                                                            int]]:
+        ent = self._data.get(path)
+        if not ent or ent.get("sha") != self.digest(source):
+            return None
+        try:
+            findings = [Finding.from_dict(d) for d in ent["findings"]]  # type: ignore[union-attr]
+            return findings, int(ent["suppressed"])  # type: ignore[arg-type]
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put(self, path: str, source: str, findings: List[Finding],
+            suppressed: int) -> None:
+        self._data[path] = {
+            "sha": self.digest(source),
+            "findings": [f.as_dict() for f in findings],
+            "suppressed": suppressed,
+        }
+        self._dirty = True
+
+    def save(self) -> None:
+        if not self._dirty:
+            return
+        tmp = self.path + ".tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump({"fingerprint": self.fingerprint,
+                           "files": self._data}, f)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass  # a cache that cannot be written is just not a cache
+
+
+def analyze_paths(paths: Sequence[str],
+                  checkers: Optional[Sequence[Type[Checker]]] = None,
+                  cache_path: Optional[str] = None) -> List[FileResult]:
+    """Analyze every .py file under ``paths``; the CLI's engine."""
+    checkers = all_checkers() if checkers is None else checkers
+    cache = Cache(cache_path, suite_fingerprint(checkers)) \
+        if cache_path else None
+    results: List[FileResult] = []
+    for path in iter_python_files(paths):
+        try:
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+        except OSError as e:
+            results.append(FileResult(path, [], 0, error=str(e)))
+            continue
+        if cache is not None:
+            hit = cache.get(path, source)
+            if hit is not None:
+                results.append(FileResult(path, hit[0], hit[1], cached=True))
+                continue
+        res = analyze_source(source, path, checkers)
+        if cache is not None and res.error is None:
+            cache.put(path, source, res.findings, res.suppressed)
+        results.append(res)
+    if cache is not None:
+        cache.save()
+    return results
+
+
+# -- shared AST helpers used by more than one checker ------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c"; None for non-name expressions."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_name(node: ast.AST) -> Optional[str]:
+    """The final component of a (possibly dotted) name expression."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def self_attr(node: ast.AST) -> Optional[str]:
+    """``self.X`` -> "X" (only plain, not ``self.a.b``)."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def iter_class_methods(cls: ast.ClassDef) -> Iterator[ast.AST]:
+    """Direct function members (sync + async) of a class body."""
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def iter_classes(tree: ast.Module) -> Iterator[ast.ClassDef]:
+    """Every ClassDef in the module, including nested ones."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            yield node
+
+
+def assign_targets(node: ast.AST) -> Iterable[ast.expr]:
+    """Targets written by an Assign/AugAssign/AnnAssign/withitem node."""
+    if isinstance(node, ast.Assign):
+        return node.targets
+    if isinstance(node, ast.AugAssign):
+        return [node.target]
+    if isinstance(node, ast.AnnAssign) and node.value is not None:
+        return [node.target]
+    return []

@@ -1,0 +1,84 @@
+"""Finding reporters: human text, JSON, and $GITHUB_STEP_SUMMARY markdown.
+
+Mirrors the shape of ``benchmarks/check_gates.py``: a readable report on
+stdout for humans and CI logs, machine-readable JSON on request, and a
+markdown table appended to the step summary when running inside GitHub
+Actions so findings are visible without digging through logs.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Sequence, Type
+
+from .core import Checker, FileResult, Finding
+
+
+def _totals(results: Sequence[FileResult]):
+    findings: List[Finding] = []
+    suppressed = 0
+    errors = []
+    cached = 0
+    for r in results:
+        findings.extend(r.findings)
+        suppressed += r.suppressed
+        if r.error:
+            errors.append((r.path, r.error))
+        cached += bool(r.cached)
+    findings.sort()
+    return findings, suppressed, errors, cached
+
+
+def render_human(results: Sequence[FileResult]) -> str:
+    findings, suppressed, errors, cached = _totals(results)
+    lines = [f.render() for f in findings]
+    lines += [f"{path}: {err}" for path, err in errors]
+    lines.append(
+        f"{len(findings)} finding(s), {suppressed} suppressed, "
+        f"{len(results)} file(s) checked"
+        + (f" ({cached} cached)" if cached else "")
+        + (f", {len(errors)} unparseable" if errors else ""))
+    return "\n".join(lines)
+
+
+def render_json(results: Sequence[FileResult]) -> str:
+    findings, suppressed, errors, cached = _totals(results)
+    return json.dumps({
+        "findings": [f.as_dict() for f in findings],
+        "suppressed": suppressed,
+        "files_checked": len(results),
+        "files_cached": cached,
+        "errors": [{"path": p, "error": e} for p, e in errors],
+    }, indent=2)
+
+
+def render_step_summary(results: Sequence[FileResult],
+                        checkers: Sequence[Type[Checker]]) -> str:
+    findings, suppressed, errors, _ = _totals(results)
+    ok = not findings and not errors
+    lines = ["## Static analysis (repro.analysis)", ""]
+    lines.append(f"{'✅' if ok else '❌'} {len(findings)} finding(s), "
+                 f"{suppressed} suppressed, {len(results)} file(s)")
+    if findings or errors:
+        lines += ["", "| location | check | finding |", "| --- | --- | --- |"]
+        for f in findings:
+            lines.append(f"| `{f.path}:{f.line}` | {f.check_id} | "
+                         f"{f.message} |")
+        for path, err in errors:
+            lines.append(f"| `{path}` | — | {err} |")
+    lines += ["", "<details><summary>checks</summary>", "",
+              "| id | invariant |", "| --- | --- |"]
+    for c in checkers:
+        lines.append(f"| {c.id} ({c.name}) | {c.invariant} |")
+    lines += ["", "</details>", ""]
+    return "\n".join(lines)
+
+
+def maybe_write_step_summary(text: str) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        try:
+            with open(path, "a") as f:
+                f.write(text)
+        except OSError:
+            pass  # the summary is best-effort decoration, never a failure

@@ -1,0 +1,199 @@
+"""Dynamic lock-order validation: the runtime complement to RPR002.
+
+RPR002 proves each attribute is written under its lock; it cannot prove
+two locks are always taken in the same *order* — the ABBA deadlock class
+needs runtime observation.  :class:`OrderedLock` is a drop-in
+``threading.Lock`` that records every (held -> acquired) edge in a
+global acquisition graph and raises :class:`LockOrderViolation` the
+moment an acquisition would close a cycle — i.e. somewhere else the same
+two locks were taken in the opposite order.  This is lockdep's trick:
+the canary fires on the *ordering* without needing the actual deadlock
+interleaving to strike, so a single pass over the chaos suite checks
+every order the code exercises.
+
+Nodes are identified by creation *site* (``file:line``), not instance:
+two replicas' ``Replica._lock``\\ s map to one node, so an ABBA between
+two instances of the same class is still a cycle.
+
+Opt-in, for the chaos sweep::
+
+    REPRO_LOCK_ORDER=1 python -m pytest tests/test_chaos.py
+
+``install()`` monkeypatches ``threading.Lock`` with a factory that
+returns an :class:`OrderedLock` only when the *caller* is repro code
+(stdlib and third-party lock users keep real locks), so the blast
+radius is exactly the repo's own lock sites.  Violations both raise at
+the acquisition site and accumulate in :data:`VIOLATIONS` — worker
+threads that swallow exceptions cannot hide one from the suite's
+teardown assertion.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+ENV_VAR = "REPRO_LOCK_ORDER"
+
+
+class LockOrderViolation(RuntimeError):
+    """An acquisition closed a cycle in the global lock-order graph."""
+
+
+#: violations observed so far: (thread name, held names, acquired name)
+VIOLATIONS: List[Tuple[str, Tuple[str, ...], str]] = []
+
+# acquisition-order graph over lock *sites*: edge a -> b means "b was
+# acquired while a was held"; the graph must stay acyclic
+_graph_lock = threading.Lock()
+_graph: Dict[str, Set[str]] = {}
+
+_tls = threading.local()
+
+
+def _held_stack() -> List["OrderedLock"]:
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    return stack
+
+
+def _find_path(src: str, dst: str) -> Optional[List[str]]:
+    """DFS path src -> dst in the acquisition graph (caller holds
+    _graph_lock)."""
+    seen = {src}
+    stack = [(src, [src])]
+    while stack:
+        node, path = stack.pop()
+        if node == dst:
+            return path
+        for nxt in _graph.get(node, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append((nxt, path + [nxt]))
+    return None
+
+
+def reset() -> None:
+    """Clear the graph and violation log (test isolation)."""
+    with _graph_lock:
+        _graph.clear()
+    del VIOLATIONS[:]
+
+
+class OrderedLock:
+    """``threading.Lock`` recording acquisition order; see module doc.
+
+    Duck-compatible with ``threading.Lock`` including use as the lock of
+    a ``threading.Condition`` (acquire/release/locked and context
+    management are all forwarded to a real lock underneath).
+    """
+
+    def __init__(self, name: Optional[str] = None):
+        if name is None:
+            f = sys._getframe(1)
+            name = f"{os.path.basename(f.f_code.co_filename)}:{f.f_lineno}"
+        self.name = name
+        self._inner = _real_lock()
+
+    def _record(self) -> None:
+        held = _held_stack()
+        if not held:
+            return
+        held_names = tuple(h.name for h in held)
+        with _graph_lock:
+            for h in held_names:
+                if h == self.name:
+                    continue  # re-acquiring the same site is not an order
+                _graph.setdefault(h, set()).add(self.name)
+            # a path self -> any held lock means somewhere the opposite
+            # order was (or is being) used: report the full cycle
+            for h in held_names:
+                if h == self.name:
+                    continue
+                path = _find_path(self.name, h)
+                if path is not None:
+                    cycle = " -> ".join(path + [self.name])
+                    violation = (threading.current_thread().name,
+                                 held_names, self.name)
+                    VIOLATIONS.append(violation)
+                    raise LockOrderViolation(
+                        f"lock acquisition order cycle: acquiring "
+                        f"{self.name} while holding "
+                        f"{', '.join(held_names)} closes {cycle}")
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            # record AFTER acquisition succeeds: a failed try-acquire
+            # establishes no order
+            try:
+                self._record()
+            except LockOrderViolation:
+                self._inner.release()
+                raise
+            _held_stack().append(self)
+        return got
+
+    def release(self) -> None:
+        stack = _held_stack()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is self:
+                del stack[i]
+                break
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"<OrderedLock {self.name} {self._inner!r}>"
+
+
+# -- global installation -----------------------------------------------------
+
+_real_lock = threading.Lock           # the unpatched factory
+_repro_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_installed = False
+
+
+def _site_lock_factory():
+    """``threading.Lock`` replacement: ordered for repro callers only."""
+    f = sys._getframe(1)
+    filename = f.f_code.co_filename
+    if filename.startswith(_repro_root) and os.sep + "analysis" \
+            not in filename[len(_repro_root):]:
+        name = f"{os.path.relpath(filename, _repro_root)}:{f.f_lineno}"
+        return OrderedLock(name)
+    return _real_lock()
+
+
+def install() -> None:
+    """Patch ``threading.Lock`` so repro-created locks become ordered.
+
+    Idempotent.  Locks created *before* install stay plain — install
+    early (the chaos suite does it in a fixture before engines exist).
+    """
+    global _installed
+    if _installed:
+        return
+    threading.Lock = _site_lock_factory  # type: ignore[assignment]
+    _installed = True
+
+
+def uninstall() -> None:
+    global _installed
+    if _installed:
+        threading.Lock = _real_lock  # type: ignore[assignment]
+        _installed = False
+
+
+def enabled_by_env() -> bool:
+    return bool(os.environ.get(ENV_VAR))

@@ -63,8 +63,8 @@ class Channel:
         self._lock = threading.Lock()
         self._send_lock = threading.Lock()
         self._closed = False
-        self._dead = False
-        self._death = "connection closed"
+        self._dead = False                 # guarded by _lock
+        self._death = "connection closed"  # guarded by _lock
         self._reader = threading.Thread(target=self._read_loop, daemon=True,
                                         name="bebop-rpc-client-reader")
         self._reader.start()
@@ -383,9 +383,9 @@ class ResilientChannel:
         self._sleep = sleep
         self._rng = rng or _random.Random()
         self._lock = threading.Lock()
-        self._channel: Optional[Channel] = None
-        self._closed = False
-        self.reconnects = 0   # successful dials beyond the first
+        self._channel: Optional[Channel] = None  # guarded by _lock
+        self._closed = False  # guarded by _lock
+        self.reconnects = 0   # successful dials beyond the first; guarded by _lock
         self.retries = 0      # unary attempts beyond each call's first
         self.gaps = 0         # cursor jumps: frames lost on a live conn
 

@@ -51,8 +51,8 @@ class ConnectionState:
     def __init__(self, peer: str = "unknown"):
         self.peer = peer
         self._lock = threading.Lock()
-        self._hooks: List[Callable[[], None]] = []
-        self._closed = False
+        self._hooks: List[Callable[[], None]] = []  # guarded by _lock
+        self._closed = False                        # guarded by _lock
 
     @property
     def closed(self) -> bool:
@@ -117,8 +117,8 @@ class DedupCache:
         self._lock = threading.Lock()
         self._entries: "collections.OrderedDict[str, _DedupEntry]" = \
             collections.OrderedDict()
-        self.hits = 0
-        self.evictions = 0
+        self.hits = 0       # guarded by _lock
+        self.evictions = 0  # guarded by _lock
 
     def begin(self, key: str):
         """-> ("mine"|"wait"|"done", entry): own it, or join the first try."""
@@ -278,7 +278,7 @@ class Server:
         #: method ids still answered while draining (health/stats probes)
         self.drain_exempt: Set[int] = set()
         self._draining = False
-        self._inflight = 0
+        self._inflight = 0  # guarded by _flight_cv
         self._flight_cv = threading.Condition()
         self._conn_lock = threading.Lock()
         self._conns: Set[Transport] = set()

@@ -216,7 +216,7 @@ class DecoderLM:
                         cfg.head_dim), dt)
         return {"k": kv, "v": kv}
 
-    def prefill(self, params: Params, batch: Batch, cache_len: int):
+    def prefill(self, params: Params, batch: Batch, cache_len: int):  # repro: jit-pure
         cfg = self.cfg
         x, positions = self._inputs(params, batch)
 
@@ -250,7 +250,7 @@ class DecoderLM:
         return {"k": jnp.zeros(shape, L.dtype_of(cfg)),
                 "v": jnp.zeros(shape, L.dtype_of(cfg))}
 
-    def _paged_backbone(self, params: Params, tokens: jax.Array, pool,
+    def _paged_backbone(self, params: Params, tokens: jax.Array, pool,  # repro: jit-pure
                         block_tables: jax.Array, positions: jax.Array,
                         last_idx: jax.Array):
         """Shared body of the paged steps: embed, scan the layers against
@@ -271,7 +271,7 @@ class DecoderLM:
         x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
         return x, {"k": k_new, "v": v_new}
 
-    def paged_step(self, params: Params, tokens: jax.Array, pool,
+    def paged_step(self, params: Params, tokens: jax.Array, pool,  # repro: jit-pure
                    block_tables: jax.Array, positions: jax.Array,
                    last_idx: jax.Array):
         """Advance up to C tokens per row against the paged pool.
@@ -293,7 +293,7 @@ class DecoderLM:
         logits = L.unembed(params, x_last, self.cfg)[:, 0]
         return logits, pool
 
-    def paged_step_verify(self, params: Params, tokens: jax.Array, pool,
+    def paged_step_verify(self, params: Params, tokens: jax.Array, pool,  # repro: jit-pure
                           block_tables: jax.Array, positions: jax.Array,
                           last_idx: jax.Array):
         """Speculative-decoding verifier: :meth:`paged_step`, but with
@@ -314,7 +314,7 @@ class DecoderLM:
                                        positions, last_idx)
         return L.unembed(params, x, self.cfg), pool
 
-    def decode_step(self, params: Params, tokens: jax.Array, cache, pos):
+    def decode_step(self, params: Params, tokens: jax.Array, cache, pos):  # repro: jit-pure
         """tokens: [B, 1]; pos: scalar absolute position."""
         cfg = self.cfg
         x = L.embed(params, tokens, cfg) if cfg.input_kind != "embeddings" \
@@ -483,7 +483,7 @@ class HybridLM:
         h = L.rms_norm(x, sub["ln2"], cfg.norm_eps)
         return x + L.mlp(sub["mlp"], h, cfg), new_cache
 
-    def prefill(self, params: Params, batch: Batch, cache_len: int):
+    def prefill(self, params: Params, batch: Batch, cache_len: int):  # repro: jit-pure
         cfg = self.cfg
         tokens = batch["tokens"]
         x = L.embed(params, tokens, cfg)
@@ -508,7 +508,7 @@ class HybridLM:
         logits = L.unembed(params, x[:, -1:], cfg)[:, 0]
         return logits, {"supers": sup_cache, "tail": tail_cache}
 
-    def decode_step(self, params: Params, tokens, cache, pos):
+    def decode_step(self, params: Params, tokens, cache, pos):  # repro: jit-pure
         cfg = self.cfg
         x = L.embed(params, tokens, cfg)
 
@@ -641,7 +641,7 @@ class EncDecLM:
         return {"k": kv, "v": kv,
                 "memory": jnp.zeros((batch, mem_len, cfg.d_model), dt)}
 
-    def prefill(self, params: Params, batch: Batch, cache_len: int):
+    def prefill(self, params: Params, batch: Batch, cache_len: int):  # repro: jit-pure
         cfg = self.cfg
         memory = self.encode(params, batch["frames"])
         tokens = batch["tokens"]
@@ -664,7 +664,7 @@ class EncDecLM:
         logits = L.unembed(params, x[:, -1:], cfg)[:, 0]
         return logits, {"k": kv["k"], "v": kv["v"], "memory": memory}
 
-    def decode_step(self, params: Params, tokens, cache, pos):
+    def decode_step(self, params: Params, tokens, cache, pos):  # repro: jit-pure
         cfg = self.cfg
         x = L.embed(params, tokens, cfg)
         memory = cache["memory"]

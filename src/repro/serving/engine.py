@@ -267,7 +267,7 @@ class ContinuousBatcher:
         self.window_s = window_s
         self._queue: collections.deque = collections.deque()
         self._cond = threading.Condition()
-        self._closed = False
+        self._closed = False  # guarded by _cond
         self.stats = {"requests": 0, "rows": 0, "batches": 0,
                       "batched_rows": 0, "shed": 0, "worker_errors": 0,
                       "cancelled": 0}
@@ -652,11 +652,11 @@ class PagedBatcher:
             donate_argnums=(0,))
         self._queue: collections.deque = collections.deque()
         self._cond = threading.Condition()
-        self._closed = False
+        self._closed = False  # guarded by _cond
         self._active: List[_PagedReq] = []
         self._slots: List[Optional[Tuple[_PagedReq, int]]] = \
             [None] * self.max_batch
-        self._next_rid = 0
+        self._next_rid = 0  # guarded by _cond
         self._preempted: List[_PagedReq] = []
         self._ttft_obs: collections.deque = collections.deque(maxlen=128)
         self._tpot_obs: collections.deque = collections.deque(maxlen=128)

@@ -86,8 +86,8 @@ class PlanCache:
     def __init__(self):
         self._plans: Dict[int, DecodePlan] = {}
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
+        self.hits = 0    # guarded by _lock
+        self.misses = 0  # guarded by _lock
 
     def register(self, s: T.Struct,
                  out_dtypes: Optional[Dict[str, str]] = None) -> DecodePlan:

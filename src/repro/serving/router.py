@@ -109,10 +109,10 @@ class CircuitBreaker:
         self.reset_after = reset_after
         self._clock = clock
         self._lock = threading.Lock()
-        self.state = self.CLOSED
-        self.failures = 0          # consecutive, reset by any success
-        self.opens = 0             # times the breaker tripped open
-        self._opened_at = 0.0
+        self.state = self.CLOSED   # guarded by _lock
+        self.failures = 0          # consecutive, reset by any success; guarded by _lock
+        self.opens = 0             # times the breaker tripped open; guarded by _lock
+        self._opened_at = 0.0      # guarded by _lock
 
     def ready(self) -> bool:
         """Pure: could a call be admitted right now?"""
@@ -733,10 +733,10 @@ class InProcessReplica:
         self.name = name or f"replica{next(self._ids)}"
         self.latency = latency
         self._lock = threading.Lock()
-        self._open: List[Tuple[Transport, Transport]] = []
-        self._dead = True
-        self.impl: Optional[InferenceImpl] = None
-        self.server: Optional[Server] = None
+        self._open: List[Tuple[Transport, Transport]] = []  # guarded by _lock
+        self._dead = True                                   # guarded by _lock
+        self.impl: Optional[InferenceImpl] = None           # guarded by _lock
+        self.server: Optional[Server] = None                # guarded by _lock
         self.start()
 
     @property
@@ -748,9 +748,14 @@ class InProcessReplica:
         return self.impl.epoch if self.impl is not None else None
 
     def start(self) -> None:
-        self.impl = InferenceImpl(self.engine)
-        self.server = build_server(self.engine, impl=self.impl)
-        self._dead = False
+        impl = InferenceImpl(self.engine)
+        server = build_server(self.engine, impl=impl)
+        # publish atomically: a dial() racing a restart() must never see
+        # _dead flipped while impl/server still point at the old process
+        with self._lock:
+            self.impl = impl
+            self.server = server
+            self._dead = False
 
     def dial(self) -> Transport:
         with self._lock:

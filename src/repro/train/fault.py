@@ -61,7 +61,7 @@ class StepWatchdog:
                  on_hang: Optional[Callable[[], None]] = None):
         self.timeout_s = timeout_s
         self.on_hang = on_hang
-        self._deadline: Optional[float] = None
+        self._deadline: Optional[float] = None  # guarded by _lock
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self.hung = False

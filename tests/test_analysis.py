@@ -1,0 +1,871 @@
+"""Tests for the repro.analysis static-checker suite and runtime canary.
+
+Covers the framework (noqa, caching, reporters, CLI exit codes), each
+checker with seeded-violation / clean / suppressed fixtures — including
+the PR 8 ``except RpcError``-before-``TransportError`` router bug as a
+regression fixture — the self-cleanliness of the shipped tree, and the
+OrderedLock dynamic lock-order validator.
+"""
+import json
+import os
+import textwrap
+import threading
+
+import pytest
+
+import repro.analysis
+from repro.analysis import all_checkers, analyze_source, get_checker
+from repro.analysis import runtime
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.core import (Cache, Finding, analyze_paths,
+                                 iter_python_files, suite_fingerprint)
+from repro.analysis.reporters import (render_human, render_json,
+                                      render_step_summary)
+
+# repro is a namespace package (no __file__); anchor on the analysis
+# subpackage and go one level up to src/repro
+REPRO_PKG = os.path.dirname(os.path.dirname(
+    os.path.abspath(repro.analysis.__file__)))
+
+
+def run_check(source, check_id=None):
+    """Analyze a dedented snippet; return findings (optionally filtered)."""
+    res = analyze_source(textwrap.dedent(source))
+    assert res.error is None, res.error
+    if check_id is None:
+        return res.findings
+    return [f for f in res.findings if f.check_id == check_id]
+
+
+# ---------------------------------------------------------------------------
+# framework
+# ---------------------------------------------------------------------------
+
+def test_registry_exposes_the_four_checkers():
+    ids = [c.id for c in all_checkers()]
+    assert ids == ["RPR001", "RPR002", "RPR003", "RPR004"]
+    for c in all_checkers():
+        assert c.invariant and c.motivation, c.id
+        assert get_checker(c.id) is c
+
+
+def test_finding_render_and_roundtrip():
+    f = Finding(path="a.py", line=3, col=4, check_id="RPR001", message="m")
+    assert f.render() == "a.py:3:4: RPR001 m"
+    assert Finding.from_dict(f.as_dict()) == f
+
+
+def test_noqa_suppresses_only_named_check_on_that_line():
+    bad = """
+    try:
+        pass
+    except Exception:
+        pass
+    except ValueError:
+        pass
+    """
+    assert run_check(bad, "RPR001")
+    suppressed = textwrap.dedent(bad).replace(
+        "except Exception:",
+        "except Exception:  # repro: noqa(RPR001) deliberate broad-first")
+    res = analyze_source(suppressed)
+    assert not res.findings
+    assert res.suppressed == 1
+    wrong_id = textwrap.dedent(bad).replace(
+        "except Exception:", "except Exception:  # repro: noqa(RPR004)")
+    assert analyze_source(wrong_id).findings
+
+
+def test_syntax_error_is_reported_not_raised():
+    res = analyze_source("def f(:\n")
+    assert res.error and "syntax" in res.error
+    assert not res.findings
+
+
+def test_iter_python_files_skips_hidden_and_pycache(tmp_path):
+    (tmp_path / "a.py").write_text("x = 1\n")
+    (tmp_path / ".hidden").mkdir()
+    (tmp_path / ".hidden" / "b.py").write_text("x = 1\n")
+    (tmp_path / "__pycache__").mkdir()
+    (tmp_path / "__pycache__" / "c.py").write_text("x = 1\n")
+    found = list(iter_python_files([str(tmp_path)]))
+    assert found == [str(tmp_path / "a.py")]
+
+
+BAD_STATS = """
+class C:
+    def __init__(self):
+        self.stats = {"hits": 0}
+
+    def poke(self):
+        self.stats["misses"] += 1
+"""
+
+
+def test_cache_hit_miss_and_invalidation(tmp_path):
+    src = tmp_path / "mod.py"
+    src.write_text(textwrap.dedent(BAD_STATS))
+    cache = str(tmp_path / "cache.json")
+
+    first = analyze_paths([str(src)], cache_path=cache)
+    assert len(first) == 1 and first[0].findings and not first[0].cached
+
+    second = analyze_paths([str(src)], cache_path=cache)
+    assert second[0].cached
+    assert second[0].findings == first[0].findings
+
+    # content change invalidates the entry
+    src.write_text(textwrap.dedent(BAD_STATS).replace(
+        '{"hits": 0}', '{"hits": 0, "misses": 0}'))
+    third = analyze_paths([str(src)], cache_path=cache)
+    assert not third[0].cached and not third[0].findings
+
+
+def test_cache_ignored_on_fingerprint_mismatch(tmp_path):
+    cache_path = str(tmp_path / "cache.json")
+    stale = Cache(cache_path, "old-fingerprint")
+    stale.put("mod.py", "x = 1\n", [], 0)
+    stale.save()
+    fresh = Cache(cache_path, suite_fingerprint(all_checkers()))
+    assert fresh.get("mod.py", "x = 1\n") is None
+
+
+def test_corrupt_cache_is_a_cold_start_not_a_crash(tmp_path):
+    cache_path = tmp_path / "cache.json"
+    cache_path.write_text("{not json")
+    src = tmp_path / "mod.py"
+    src.write_text("x = 1\n")
+    results = analyze_paths([str(src)], cache_path=str(cache_path))
+    assert results[0].error is None and not results[0].cached
+
+
+def test_reporters_render_totals_and_tables():
+    res = analyze_source(textwrap.dedent(BAD_STATS), path="mod.py")
+    human = render_human([res])
+    assert "mod.py:" in human and "1 finding(s)" in human
+    blob = json.loads(render_json([res]))
+    assert blob["files_checked"] == 1
+    assert blob["findings"][0]["check_id"] == "RPR004"
+    summary = render_step_summary([res], all_checkers())
+    assert "❌" in summary and "RPR004" in summary
+    clean = analyze_source("x = 1\n", path="ok.py")
+    assert "✅" in render_step_summary([clean], all_checkers())
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_exit_codes_and_json(tmp_path, capsys, monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(BAD_STATS))
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+
+    assert cli_main([str(clean), "--no-cache"]) == 0
+    assert cli_main([str(bad), "--no-cache"]) == 1
+    out = capsys.readouterr().out
+    assert "RPR004" in out
+
+    assert cli_main([str(bad), "--no-cache", "--format", "json"]) == 1
+    blob = json.loads(capsys.readouterr().out)
+    assert blob["findings"]
+
+    # selecting a checker that does not fire on this file passes
+    assert cli_main([str(bad), "--no-cache", "--select", "RPR001"]) == 0
+    assert cli_main(["--select", "NOPE"]) == 2
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert cli_main([str(empty), "--no-cache"]) == 2
+    assert cli_main(["--list-checks"]) == 0
+    assert "RPR001" in capsys.readouterr().out
+
+
+def test_cli_appends_github_step_summary(tmp_path, capsys, monkeypatch):
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(BAD_STATS))
+    assert cli_main([str(bad), "--no-cache"]) == 1
+    capsys.readouterr()
+    text = summary.read_text()
+    assert "Static analysis" in text and "RPR004" in text
+
+
+def test_cli_unparseable_file_fails_the_run(tmp_path, capsys):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    assert cli_main([str(bad), "--no-cache"]) == 1
+    assert "syntax" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# RPR001 exception-order
+# ---------------------------------------------------------------------------
+
+# the PR 8 router bug, verbatim shape: the broad RpcError clause ahead of
+# the retryable transport clause made wire failures look like application
+# errors, so healthy replicas were drained instead of retried
+PR8_ROUTER_FIXTURE = """
+def call_replica(replica, request):
+    try:
+        return replica.invoke(request)
+    except RpcError:
+        replica.mark_draining()
+        raise
+    except (TransportError, ClientTimeout):
+        replica.breaker.record_failure()
+        raise
+"""
+
+
+def test_rpr001_pr8_router_regression():
+    findings = run_check(PR8_ROUTER_FIXTURE, "RPR001")
+    assert len(findings) == 1
+    f = findings[0]
+    # anchored at the broad clause (where a deliberate noqa would go)
+    assert f.line == 5
+    assert "RpcError" in f.message
+    assert "TransportError" in f.message
+    assert "unreachable" in f.message
+
+
+def test_rpr001_pr8_fixture_fails_via_cli(tmp_path, capsys, monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    fixture = tmp_path / "router_bug.py"
+    fixture.write_text(textwrap.dedent(PR8_ROUTER_FIXTURE))
+    assert cli_main([str(fixture), "--no-cache"]) == 1
+    assert "RPR001" in capsys.readouterr().out
+
+
+def test_rpr001_narrowest_first_is_clean():
+    assert not run_check("""
+    def f(replica):
+        try:
+            replica.invoke()
+        except (TransportError, ClientTimeout):
+            pass
+        except RpcError:
+            pass
+        except Exception:
+            pass
+    """, "RPR001")
+
+
+def test_rpr001_builtin_hierarchy():
+    findings = run_check("""
+    try:
+        pass
+    except OSError:
+        pass
+    except ConnectionError:
+        pass
+    """, "RPR001")
+    assert len(findings) == 1 and "ConnectionError" in findings[0].message
+
+
+def test_rpr001_duplicate_class():
+    findings = run_check("""
+    try:
+        pass
+    except ValueError:
+        pass
+    except ValueError:
+        pass
+    """, "RPR001")
+    assert len(findings) == 1 and "duplicates" in findings[0].message
+
+
+def test_rpr001_local_class_hierarchy():
+    findings = run_check("""
+    class Base(Exception):
+        pass
+
+    class Leaf(Base):
+        pass
+
+    try:
+        pass
+    except Base:
+        pass
+    except Leaf:
+        pass
+    """, "RPR001")
+    assert len(findings) == 1 and "Leaf" in findings[0].message
+
+
+def test_rpr001_retryable_alias_resolves():
+    findings = run_check("""
+    try:
+        pass
+    except RpcError:
+        pass
+    except RETRYABLE:
+        pass
+    """, "RPR001")
+    assert len(findings) == 1
+
+
+def test_rpr001_local_tuple_alias():
+    findings = run_check("""
+    FATAL = (ValueError, KeyError)
+    try:
+        pass
+    except Exception:
+        pass
+    except FATAL:
+        pass
+    """, "RPR001")
+    assert len(findings) == 1
+
+
+def test_rpr001_opaque_names_are_conservative():
+    assert not run_check("""
+    try:
+        pass
+    except some_module.DynamicError:
+        pass
+    except ValueError:
+        pass
+    """, "RPR001")
+
+
+def test_rpr001_bare_except_catches_everything():
+    findings = run_check("""
+    try:
+        pass
+    except:
+        pass
+    except ValueError:
+        pass
+    """, "RPR001")
+    assert len(findings) == 1
+
+
+# ---------------------------------------------------------------------------
+# RPR002 lock-discipline
+# ---------------------------------------------------------------------------
+
+# the PR 8 replica bug this suite's fix addressed: start() republished
+# impl/server/_dead without the lock that kill()/dial() hold, so a dial
+# racing a restart could observe _dead flipped with stale impl/server
+REPLICA_PREFIX_FIXTURE = """
+import threading
+
+class InProcessReplica:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._dead = True
+        self.impl = None
+        self.server = None
+
+    def start(self):
+        self.impl = object()
+        self.server = object()
+        self._dead = False
+
+    def kill(self):
+        with self._lock:
+            self._dead = True
+            self.impl = None
+            self.server = None
+"""
+
+
+def test_rpr002_replica_unlocked_publish_regression():
+    findings = run_check(REPLICA_PREFIX_FIXTURE, "RPR002")
+    flagged = {f.line for f in findings}
+    # all three start() writes are outside the lock kill() establishes
+    assert flagged == {12, 13, 14}
+    assert all("without holding" in f.message for f in findings)
+
+
+def test_rpr002_locked_everywhere_is_clean():
+    assert not run_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def bump(self):
+            with self._lock:
+                self.n += 1
+
+        def reset(self):
+            with self._lock:
+                self.n = 0
+    """, "RPR002")
+
+
+def test_rpr002_explicit_annotation_creates_guard():
+    findings = run_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0   # guarded by _lock
+
+        def bump(self):
+            self.n += 1
+    """, "RPR002")
+    assert len(findings) == 1 and findings[0].line == 10
+
+
+def test_rpr002_exemptions():
+    assert not run_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def bump(self):
+            with self._lock:
+                self.n += 1
+
+        def _bump_locked(self):
+            self.n += 1
+
+        def merge(self):
+            '''Caller holds self._lock.'''
+            self.n = 0
+    """, "RPR002")
+
+
+def test_rpr002_closure_needs_its_own_lock():
+    findings = run_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def bump(self):
+            with self._lock:
+                self.n += 1
+
+        def spawn(self):
+            with self._lock:
+                def worker():
+                    self.n = 5
+                return worker
+    """, "RPR002")
+    # the with wraps the def, not the call: the closure body runs later,
+    # lockless, on another thread
+    assert len(findings) == 1 and findings[0].line == 16
+
+
+def test_rpr002_condition_counts_as_lock():
+    findings = run_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self._cond = threading.Condition()
+            self.q = []
+
+        def put(self, x):
+            with self._cond:
+                self.q.append(x)
+                self.q = self.q
+
+        def clear(self):
+            self.q = []
+    """, "RPR002")
+    assert len(findings) == 1 and "self._cond" in findings[0].message
+
+
+def test_rpr002_noqa_single_writer():
+    res = analyze_source(textwrap.dedent("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def bump(self):
+            with self._lock:
+                self.n += 1
+
+        def owner_thread_only(self):
+            self.n = 0  # repro: noqa(RPR002) single writer thread
+    """))
+    assert not [f for f in res.findings if f.check_id == "RPR002"]
+    assert res.suppressed == 1
+
+
+# ---------------------------------------------------------------------------
+# RPR003 jit-purity
+# ---------------------------------------------------------------------------
+
+def test_rpr003_traced_branch_in_jitted_fn():
+    findings = run_check("""
+    import jax
+
+    @jax.jit
+    def step(x):
+        if x > 0:
+            return x
+        return -x
+    """, "RPR003")
+    assert len(findings) == 1 and "if" in findings[0].message
+
+
+def test_rpr003_static_argnames_branch_is_clean():
+    assert not run_check("""
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def step(x, n):
+        if n > 1:
+            return x * n
+        return x
+    """, "RPR003")
+
+
+def test_rpr003_shape_len_and_is_none_are_static():
+    assert not run_check("""
+    import jax
+
+    @jax.jit
+    def step(x, mask):
+        if x.shape[0] > 1:
+            x = x + 1
+        if len(x.shape) == 2:
+            x = x + 2
+        if mask is not None:
+            x = x + 3
+        return x
+    """, "RPR003")
+
+
+def test_rpr003_host_syncs_and_print():
+    findings = run_check("""
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def step(x):
+        print("tracing", x)
+        v = float(x)
+        w = x.sum().item()
+        h = np.asarray(x)
+        return v + w + h
+    """, "RPR003")
+    msgs = " | ".join(f.message for f in findings)
+    assert "print" in msgs
+    assert "float" in msgs
+    assert ".item()" in msgs
+    assert "np.asarray" in msgs
+    assert len(findings) == 4
+
+
+def test_rpr003_marker_comment_zone():
+    findings = run_check("""
+    def step(params, x):  # repro: jit-pure
+        while x > 0:
+            x = x - 1
+        return x
+    """, "RPR003")
+    assert len(findings) == 1 and "while" in findings[0].message
+
+
+def test_rpr003_marker_statics():
+    assert not run_check("""
+    def step(x, n):  # repro: jit-pure(static=n)
+        if n > 1:
+            return x * n
+        return x
+    """, "RPR003")
+
+
+def test_rpr003_pallas_partial_alias_kernel():
+    findings = run_check("""
+    import functools
+    import jax.experimental.pallas as pl
+
+    def _kernel(x_ref, o_ref, *, scale):
+        print("inside kernel")
+        o_ref[...] = x_ref[...] * scale
+
+    def launch(x, scale):
+        kernel = functools.partial(_kernel, scale=scale)
+        return pl.pallas_call(kernel, out_shape=x)(x)
+    """, "RPR003")
+    assert len(findings) == 1 and "print" in findings[0].message
+
+
+def test_rpr003_partial_bound_kwargs_are_static():
+    assert not run_check("""
+    import functools
+    import jax.experimental.pallas as pl
+
+    def _kernel(x_ref, o_ref, *, n):
+        if n > 1:
+            o_ref[...] = x_ref[...]
+
+    def launch(x):
+        kernel = functools.partial(_kernel, n=4)
+        return pl.pallas_call(kernel, out_shape=x)(x)
+    """, "RPR003")
+
+
+def test_rpr003_vararg_unrolling_is_clean():
+    # `*o_refs` is a Python tuple of refs: static-length unrolling is
+    # the normal Pallas multi-output idiom, not a traced loop
+    assert not run_check("""
+    import jax.experimental.pallas as pl
+
+    def _kernel(x_ref, *o_refs):
+        for i, o_ref in enumerate(o_refs):
+            o_ref[...] = x_ref[...] + i
+
+    def launch(x, outs):
+        return pl.pallas_call(_kernel, out_shape=outs)(x)
+    """, "RPR003")
+
+
+def test_rpr003_noqa_deliberate_sync():
+    res = analyze_source(textwrap.dedent("""
+    import jax
+
+    @jax.jit
+    def step(x):
+        v = float(x)  # repro: noqa(RPR003) debug-only path
+        return v
+    """))
+    assert not [f for f in res.findings if f.check_id == "RPR003"]
+    assert res.suppressed == 1
+
+
+def test_rpr003_undecorated_fn_is_not_a_zone():
+    assert not run_check("""
+    def host_side(x):
+        if x > 0:
+            print(x)
+        return float(x)
+    """, "RPR003")
+
+
+# ---------------------------------------------------------------------------
+# RPR004 stats-keys
+# ---------------------------------------------------------------------------
+
+def test_rpr004_missing_key_read_and_write():
+    findings = run_check("""
+    class C:
+        def __init__(self):
+            self.stats = {"hits": 0}
+
+        def poke(self):
+            self.stats["misses"] += 1
+            return self.stats["evictions"]
+    """, "RPR004")
+    assert {f.message.split("'")[1] for f in findings} == \
+        {"misses", "evictions"}
+    assert all("line 4" in f.message for f in findings)
+
+
+def test_rpr004_initialized_keys_are_clean():
+    assert not run_check("""
+    class C:
+        def __init__(self):
+            self.stats = {"hits": 0, "misses": 0}
+
+        def poke(self):
+            self.stats["hits"] += 1
+            self.stats["misses"] = 0
+    """, "RPR004")
+
+
+def test_rpr004_non_literal_dict_skips_class():
+    assert not run_check("""
+    class C:
+        def __init__(self, base):
+            self.stats = dict(base)
+
+        def poke(self):
+            self.stats["anything"] += 1
+    """, "RPR004")
+
+
+def test_rpr004_multiple_assigns_union():
+    assert not run_check("""
+    class C:
+        def __init__(self):
+            self.stats = {"hits": 0}
+
+        def reset(self):
+            self.stats = {"hits": 0, "misses": 0}
+
+        def poke(self):
+            self.stats["misses"] += 1
+    """, "RPR004")
+
+
+def test_rpr004_nested_class_isolated():
+    findings = run_check("""
+    class Outer:
+        def __init__(self):
+            self.stats = {"outer": 0}
+
+        class Inner:
+            def __init__(self):
+                self.stats = {"inner": 0}
+
+            def poke(self):
+                self.stats["inner"] += 1
+
+        def poke(self):
+            self.stats["outer"] += 1
+    """, "RPR004")
+    assert not findings
+
+
+def test_rpr004_dynamic_keys_out_of_scope():
+    assert not run_check("""
+    class C:
+        def __init__(self):
+            self.stats = {"hits": 0}
+
+        def poke(self, key):
+            self.stats[key] += 1
+    """, "RPR004")
+
+
+# ---------------------------------------------------------------------------
+# the shipped tree is clean
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_clean():
+    """`python -m repro.analysis src` must exit 0 on the shipped tree."""
+    results = analyze_paths([REPRO_PKG], cache_path=None)
+    assert results, "no files found under the repro package"
+    problems = [f.render() for r in results for f in r.findings]
+    problems += [f"{r.path}: {r.error}" for r in results if r.error]
+    assert not problems, "\n".join(problems)
+
+
+# ---------------------------------------------------------------------------
+# runtime lock-order canary
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def clean_graph():
+    runtime.reset()
+    yield
+    runtime.reset()
+    runtime.uninstall()
+
+
+def test_ordered_lock_consistent_order_ok(clean_graph):
+    a = runtime.OrderedLock("A")
+    b = runtime.OrderedLock("B")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert not runtime.VIOLATIONS
+
+
+def test_ordered_lock_abba_detected(clean_graph):
+    a = runtime.OrderedLock("A")
+    b = runtime.OrderedLock("B")
+    with a:
+        with b:
+            pass
+    with pytest.raises(runtime.LockOrderViolation):
+        with b:
+            with a:
+                pass
+    assert runtime.VIOLATIONS
+    # the violating acquire released its inner lock on the way out
+    assert not a.locked() and not b.locked()
+
+
+def test_ordered_lock_transitive_cycle(clean_graph):
+    a = runtime.OrderedLock("A")
+    b = runtime.OrderedLock("B")
+    c = runtime.OrderedLock("C")
+    with a:
+        with b:
+            pass
+    with b:
+        with c:
+            pass
+    with pytest.raises(runtime.LockOrderViolation):
+        with c:
+            with a:
+                pass
+
+
+def test_ordered_lock_sequential_use_is_not_nesting(clean_graph):
+    a = runtime.OrderedLock("A")
+    b = runtime.OrderedLock("B")
+    with a:
+        pass
+    with b:
+        pass
+    with b:
+        pass
+    with a:
+        pass
+    assert not runtime.VIOLATIONS
+
+
+def test_ordered_lock_condition_compatible(clean_graph):
+    cond = threading.Condition(runtime.OrderedLock("cond"))
+    got = []
+
+    def worker():
+        with cond:
+            got.append(1)
+            cond.notify()
+
+    with cond:
+        t = threading.Thread(target=worker)
+        t.start()
+        assert cond.wait_for(lambda: got, timeout=5.0)
+    t.join()
+
+
+def test_install_patches_repro_callers_only(clean_graph):
+    runtime.install()
+    try:
+        # a lock created from test code stays a plain lock
+        plain = threading.Lock()
+        assert not isinstance(plain, runtime.OrderedLock)
+        # a lock created from a repro-package source file becomes ordered
+        fake = os.path.join(REPRO_PKG, "serving", "fake_module.py")
+        ns = {}
+        exec(compile("import threading\nlk = threading.Lock()",
+                     fake, "exec"), ns)
+        assert isinstance(ns["lk"], runtime.OrderedLock)
+        assert ns["lk"].name.endswith("fake_module.py:2")
+    finally:
+        runtime.uninstall()
+    assert threading.Lock is runtime._real_lock
+
+
+def test_install_is_idempotent(clean_graph):
+    runtime.install()
+    runtime.install()
+    runtime.uninstall()
+    assert threading.Lock is runtime._real_lock
+    runtime.uninstall()  # second uninstall is a no-op
+    assert threading.Lock is runtime._real_lock
+
+
+def test_enabled_by_env(monkeypatch):
+    monkeypatch.delenv(runtime.ENV_VAR, raising=False)
+    assert not runtime.enabled_by_env()
+    monkeypatch.setenv(runtime.ENV_VAR, "1")
+    assert runtime.enabled_by_env()

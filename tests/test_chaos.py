@@ -58,6 +58,32 @@ POLICY = RetryPolicy(attempts=12, base_delay=0.02, max_delay=0.1,
 ATTEMPT_TIMEOUT = 2.0
 
 
+@pytest.fixture(scope="module", autouse=True)
+def lock_order_canary():
+    """Opt-in dynamic lock-order validation (``REPRO_LOCK_ORDER=1``).
+
+    Installs :mod:`repro.analysis.runtime`'s ``OrderedLock`` patch before
+    the engine/server fixtures create any locks, so every lock the chaos
+    run exercises lands in the global acquisition-order graph.  An ABBA
+    ordering raises at the acquisition site *and* is re-asserted here at
+    teardown, in case a worker thread swallowed the exception.  The
+    nightly chaos sweep runs with this on; plain tier-1 runs skip the
+    patch entirely.
+    """
+    from repro.analysis import runtime
+    if not runtime.enabled_by_env():
+        yield
+        return
+    runtime.reset()
+    runtime.install()
+    try:
+        yield
+    finally:
+        runtime.uninstall()
+    assert not runtime.VIOLATIONS, (
+        f"lock-order violations during chaos run: {runtime.VIOLATIONS}")
+
+
 @pytest.fixture(scope="module")
 def setup():
     cfg = reduced_config(get_config("qwen2-1.5b"))

@@ -10,6 +10,7 @@ undocumented.
 import dataclasses
 import pathlib
 
+from repro.analysis import all_checkers
 from repro.launch.serve import build_parser
 from repro.serving import ServeConfig
 
@@ -48,6 +49,22 @@ def test_readme_links_both_docs():
     text = (ROOT / "README.md").read_text()
     assert "docs/ARCHITECTURE.md" in text
     assert "docs/TUNING.md" in text
+
+
+def test_every_checker_documented_in_architecture():
+    """A registered static check must appear in ARCHITECTURE.md's table.
+
+    Introspects ``repro.analysis.all_checkers()`` so adding RPR005
+    without documenting its invariant and motivation fails here.
+    """
+    text = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## Static analysis" in text
+    missing = [c.id for c in all_checkers() if f"`{c.id}`" not in text]
+    assert not missing, (
+        f"checkers missing from docs/ARCHITECTURE.md's Static analysis "
+        f"table: {missing} (add a row: id, invariant, motivating bug)")
+    # the suppression syntax must be documented alongside the checks
+    assert "noqa(CHECK-ID)" in text
 
 
 def test_architecture_covers_the_lifecycle_and_ownership():
