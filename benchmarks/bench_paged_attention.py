@@ -71,6 +71,23 @@ buy the serving engine?":
     outlive the observed latency quantile; the gate requires the hedged
     p99 to be at most half the unhedged p99.
 
+  * ``sampling`` — seeded stochastic decode (temperature 0.8, top-p) of
+    8 concurrent requests through the paged scheduler vs the same 8
+    requests run one at a time through the dense ``Engine.generate``
+    loop.  The honesty check is the folded-key property itself: each
+    request's sampled tokens are a pure function of (seed, output
+    index, candidate), so the batched paged run must be bit-identical
+    to the serial dense run — the speedup is batching, never different
+    randomness.
+
+  * ``parallel_n`` — one prompt sampled into n=4 parallel candidates
+    via ``submit(..., n=4)`` (prefill once, fork the prompt's KV blocks
+    through the refcounted allocator, diverge by copy-on-write) vs 4
+    independent submissions of the same prompt.  Candidate 0 of the
+    fork is asserted bit-identical to an independent run at the same
+    seed, and the derived column reports the peak-block ratio — the
+    memory the shared prompt blocks saved.
+
 CPU numbers (the CI gate) run the reference paged-attention gather; the
 Pallas kernels are the same schedule on TPU.
 """
@@ -84,7 +101,8 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.core.rpc import Deadline
 from repro.serving import (ContinuousBatcher, Engine, PagedBatcher,
-                           PagedKVCache, ServeConfig, ShedError)
+                           PagedKVCache, SamplingParams, ServeConfig,
+                           ShedError)
 from .timing import bench
 
 MAXN = 8
@@ -126,6 +144,22 @@ OVL_BLOCKS = 16           # pool: 15 usable (block 0 is the null block),
                           # so demand is 31/15 > 2x oversubscription
 OVL_DEADLINE_FRAC = 0.35  # burst deadline as a fraction of the measured
                           # uncontended reference duration
+
+# sampling workload geometry: seeded stochastic decode, batched vs serial
+SAMP_REQS = 8
+SAMP_T = 16
+SAMP_MAXN = 32
+SAMP_TEMP = 0.8
+SAMP_TOPP = 0.9
+
+# parallel_n workload geometry: one prompt, n forked candidates vs n
+# independent submissions.  The prompt is block-aligned (64 = 4 blocks
+# of 16) so the fork shares whole blocks and the peak-block ratio is
+# clean: independent ~= n * blocks(prompt + maxn), forked ~= blocks
+# (prompt) + n * blocks(maxn)
+PN_N = 4
+PN_T = 64
+PN_MAXN = 16
 
 
 def _decode_step_bench(engine: Engine):
@@ -428,6 +462,122 @@ def _spec_decode_bench(cfg):
          f"spec_proposed={stats['spec_proposed']} "
          f"spec_accepted={stats['spec_accepted']} "
          f"(n-gram drafts, {SPEC_LEN}-token verify)"),
+    ]
+
+
+def _sampling_bench(cfg):
+    """Batched seeded sampling vs a serial dense sampled loop.
+
+    Spec decode is off: at temperature > 0 the speculative path is
+    distribution-identical but not bit-identical (rejection sampling
+    burns different uniforms), and this workload's honesty check is
+    exact equality between the paged batch and the dense serial loop.
+    """
+    engine = Engine(cfg, ServeConfig(
+        cache_len=SAMP_T + SAMP_MAXN, max_new_tokens=SAMP_MAXN,
+        max_batch=SAMP_REQS, prefill_chunk=16, spec_decode=False,
+        prefix_cache=False))
+    rng = np.random.default_rng(43)
+    prompts = [rng.integers(0, cfg.vocab_size, (1, SAMP_T)).astype(np.int32)
+               for _ in range(SAMP_REQS)]
+    sps = [SamplingParams(temperature=SAMP_TEMP, top_p=SAMP_TOPP,
+                          seed=100 + i) for i in range(SAMP_REQS)]
+    batcher = PagedBatcher(engine, max_batch=SAMP_REQS)
+
+    def run_serial():
+        return [engine.generate(p, max_new_tokens=SAMP_MAXN, sampling=sp)
+                for p, sp in zip(prompts, sps)]
+
+    def run_batched():
+        futs = [batcher.submit(p, max_new_tokens=SAMP_MAXN, sampling=sp)
+                for p, sp in zip(prompts, sps)]
+        return [f.result(timeout=600) for f in futs]
+
+    # warmup (jit) + the honesty check: the folded-key schedule makes
+    # each request's draws independent of batch composition AND of the
+    # dense/paged split, so the two runs must agree token-for-token
+    ref = run_serial()
+    got = run_batched()
+    for r, g in zip(ref, got):
+        assert np.array_equal(r, g), "batched sampled != serial sampled"
+    t_serial, _ = bench(run_serial, min_time_s=0.0, repeats=3)
+    t_batched, _ = bench(run_batched, min_time_s=0.0, repeats=3)
+    stats = dict(batcher.stats)
+    batcher.close()
+    assert stats["sampled_requests"] > 0, "no request was ever sampled"
+    n_tokens = SAMP_REQS * SAMP_MAXN
+    return [
+        ("paged_attention.sampling.serial", t_serial * 1e6,
+         f"tokens_per_s={n_tokens / t_serial:.1f} one dense sampled "
+         f"request at a time (temperature={SAMP_TEMP} top_p={SAMP_TOPP}, "
+         f"{SAMP_REQS} reqs x {SAMP_MAXN} tokens)"),
+        ("paged_attention.sampling.batched", t_batched * 1e6,
+         f"tokens_per_s={n_tokens / t_batched:.1f} "
+         f"speedup={t_serial / t_batched:.2f}x "
+         f"sampled_requests={stats['sampled_requests']} "
+         f"(seeded draws bit-identical to the serial run)"),
+    ]
+
+
+def _parallel_n_bench(cfg):
+    """n=4 forked candidates vs 4 independent same-prompt submissions."""
+    engine = Engine(cfg, ServeConfig(
+        cache_len=PN_T + PN_MAXN, max_new_tokens=PN_MAXN,
+        max_batch=PN_N, prefill_chunk=16, spec_decode=False,
+        prefix_cache=False))
+    prompt = np.random.default_rng(47) \
+        .integers(0, cfg.vocab_size, (1, PN_T)).astype(np.int32)
+    sp = SamplingParams(temperature=SAMP_TEMP, seed=7)
+    batcher = PagedBatcher(engine, max_batch=PN_N)
+    total_blocks = batcher.cache.layout.num_blocks
+    peaks = {"forked": 0, "independent": 0}
+
+    def mk_hook(key):
+        def hook(idx, tok):
+            used = total_blocks - batcher.cache.num_free_blocks
+            peaks[key] = max(peaks[key], used)
+        return hook
+
+    def run_forked():
+        return batcher.submit(prompt, max_new_tokens=PN_MAXN, sampling=sp,
+                              n=PN_N, on_token=mk_hook("forked")) \
+            .result(timeout=600)
+
+    def run_independent():
+        futs = [batcher.submit(prompt, max_new_tokens=PN_MAXN, sampling=sp,
+                               on_token=mk_hook("independent"))
+                for _ in range(PN_N)]
+        return [f.result(timeout=600) for f in futs]
+
+    # warmup (jit) + the honesty check: every candidate row r draws from
+    # keys folded with its candidate index, and an independent submission
+    # is candidate 0 — so fork row 0 must equal the solo run exactly
+    forked = run_forked()
+    indep = run_independent()
+    assert forked.shape[0] == PN_N, "fork did not return n candidate rows"
+    for out in indep:
+        assert np.array_equal(out, indep[0]), \
+            "independent same-seed runs disagree"
+    assert np.array_equal(forked[:1], indep[0]), \
+        "fork candidate 0 != independent run at the same seed"
+    t_forked, _ = bench(run_forked, min_time_s=0.0, repeats=3)
+    t_indep, _ = bench(run_independent, min_time_s=0.0, repeats=3)
+    stats = dict(batcher.stats)
+    batcher.close()
+    assert stats["forks"] > 0, "the n>1 path never forked a request"
+    assert peaks["forked"] and peaks["independent"], "peak blocks unmeasured"
+    ratio = peaks["independent"] / peaks["forked"]
+    return [
+        ("paged_attention.parallel_n.independent", t_indep * 1e6,
+         f"peak_blocks={peaks['independent']} {PN_N} separate "
+         f"submissions of one {PN_T}-token prompt ({PN_N} full "
+         f"prefills, no shared KV)"),
+        ("paged_attention.parallel_n.forked", t_forked * 1e6,
+         f"block_ratio={ratio:.2f} peak_blocks={peaks['forked']} "
+         f"speedup={t_indep / t_forked:.2f}x "
+         f"forks={stats['forks']} cow_copies={stats['cow_copies']} "
+         f"(one prefill, prompt KV blocks refcount-shared across "
+         f"candidates)"),
     ]
 
 
@@ -736,6 +886,8 @@ def run(quick: bool = False):
     rows += _mixed_admission_bench(cfg)
     rows += _shared_prefix_bench(cfg)
     rows += _spec_decode_bench(cfg)
+    rows += _sampling_bench(cfg)
+    rows += _parallel_n_bench(cfg)
     rows += _overload_bench(cfg)
     rows += _failover_bench(cfg)
     rows += _hedged_tail_bench(cfg)

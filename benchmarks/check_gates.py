@@ -54,6 +54,14 @@ THRESHOLDS = {
     # with one replica behind a slow link, hedged p99 <= 0.5x unhedged,
     # and the hedge must have actually fired
     "hedged_tail.max_p99_ratio": 0.5,
+    # concurrent seeded-sampled requests through the paged scheduler
+    # >= 1.2x the serial dense sampled loop (the bench asserts the
+    # batched tokens bit-identical to the serial run first)
+    "sampling.min_speedup": 1.2,
+    # n=4 forked candidates must peak at <= 1/1.5 the KV blocks of 4
+    # independent same-prompt submissions — the fork must actually
+    # share the prompt's blocks, not copy them
+    "parallel_n.min_block_ratio": 1.5,
 }
 
 
@@ -245,12 +253,43 @@ def _check_hedged_tail(rows: Rows) -> List[GateResult]:
     return out
 
 
+def _check_sampling(rows: Rows) -> List[GateResult]:
+    gate = "seeded sampling throughput"
+    name = "paged_attention.sampling.batched"
+    out = _check_speedup_row(rows, gate, name, "speedup",
+                             THRESHOLDS["sampling.min_speedup"])
+    row = rows.get(name)
+    if row is not None:
+        sampled = _derived_num(row[1], "sampled_requests") or 0
+        out.append(GateResult(
+            gate, sampled > 0,
+            f"sampled_requests={sampled:.0f} (need > 0: the workload "
+            f"must have exercised the stochastic path)"))
+    return out
+
+
+def _check_parallel_n(rows: Rows) -> List[GateResult]:
+    gate = "parallel sampling KV sharing"
+    name = "paged_attention.parallel_n.forked"
+    out = _check_speedup_row(rows, gate, name, "block_ratio",
+                             THRESHOLDS["parallel_n.min_block_ratio"])
+    row = rows.get(name)
+    if row is not None:
+        forks = _derived_num(row[1], "forks") or 0
+        out.append(GateResult(
+            gate, forks > 0,
+            f"forks={forks:.0f} (need > 0: the candidates must come "
+            f"from an actual fork, not n independent prefills)"))
+    return out
+
+
 _CHECKS = (_check_serve_ingest, _check_paged_step,
            lambda rows: _check_speedup_row(
                rows, "paged engine throughput",
                "paged_attention.engine_mixed16.paged", "speedup",
                THRESHOLDS["engine_mixed16.min_speedup"]),
            _check_admission, _check_shared_prefix, _check_spec_decode,
+           _check_sampling, _check_parallel_n,
            _check_overload, _check_failover, _check_hedged_tail)
 
 

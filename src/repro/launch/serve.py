@@ -98,6 +98,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--slo-adjust-every", type=int, default=16,
                     help="scheduler steps between SLO-controller updates "
                          "to the live --max-step-tokens budget")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="default sampling temperature for requests that "
+                         "don't carry one (0 = greedy argmax, the "
+                         "historical behavior; per-request temperature "
+                         "overrides)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="default top-k sampling filter: keep only the k "
+                         "highest-probability tokens before drawing "
+                         "(0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="default nucleus-sampling filter: keep the "
+                         "smallest token set with cumulative probability "
+                         ">= top_p (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="default sampling seed for requests that don't "
+                         "carry one; same seed + same prompt => same "
+                         "tokens, independent of batch composition")
     ap.add_argument("--dense-cache", action="store_true",
                     help="disable the paged KV cache / mixed-length "
                          "scheduler and serve with the dense batcher")
@@ -306,6 +323,10 @@ def _child_argv(args) -> list:
             "--ttft-slo-ms", str(args.ttft_slo_ms),
             "--tpot-slo-ms", str(args.tpot_slo_ms),
             "--slo-adjust-every", str(args.slo_adjust_every),
+            "--temperature", str(args.temperature),
+            "--top-k", str(args.top_k),
+            "--top-p", str(args.top_p),
+            "--seed", str(args.seed),
             "--drain-timeout", str(args.drain_timeout),
             "--prefix-cache" if args.prefix_cache else "--no-prefix-cache",
             "--spec-decode" if args.spec_decode else "--no-spec-decode",
@@ -451,7 +472,11 @@ def main(argv=None) -> int:
                                      default_priority=args.default_priority,
                                      ttft_slo_ms=args.ttft_slo_ms,
                                      tpot_slo_ms=args.tpot_slo_ms,
-                                     slo_adjust_every=args.slo_adjust_every))
+                                     slo_adjust_every=args.slo_adjust_every,
+                                     temperature=args.temperature,
+                                     top_k=args.top_k,
+                                     top_p=args.top_p,
+                                     seed=args.seed))
     server = build_server(engine)
     host, port, lsock = server.listen_tcp(args.host, args.port)
     mode = "paged" if not args.dense_cache and engine.supports_paged \

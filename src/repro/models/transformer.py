@@ -284,7 +284,9 @@ class DecoderLM:
         advances 1 token (last_idx 0), a prefilling row advances
         ``last_idx + 1`` prompt tokens, and padding past last_idx writes
         only to the null block.  Returns (logits [B, V] at last_idx,
-        new pool).
+        new pool) — raw logits, never an argmax: token selection is the
+        scheduler's job (greedy argmax or the seeded sampler in
+        serving/sampling.py), so one compiled step serves both.
         """
         x, pool = self._paged_backbone(params, tokens, pool, block_tables,
                                        positions, last_idx)
@@ -305,10 +307,13 @@ class DecoderLM:
         consumed tokens ``0..j`` — so ``argmax(logits[b, j]) ==
         tokens[b, j+1]`` is exactly "draft j+1 verified", and the first
         mismatch's argmax is the fallback token the sequential decode
-        would have produced.  Positions past ``last_idx`` are padding:
-        their K/V writes go to the null block and their logits are
-        garbage the engine never reads.  Returns (logits [B, C, V],
-        new pool).
+        would have produced.  At temperature > 0 the engine instead
+        feeds these per-position logits to rejection sampling
+        (serving/sampling.py), which is why the verifier returns full
+        logits rather than deciding acceptance itself.  Positions past
+        ``last_idx`` are padding: their K/V writes go to the null block
+        and their logits are garbage the engine never reads.  Returns
+        (logits [B, C, V], new pool).
         """
         x, pool = self._paged_backbone(params, tokens, pool, block_tables,
                                        positions, last_idx)

@@ -20,7 +20,12 @@ Three layers, one subsystem:
     batching, mid-generation admission, and self-speculative decoding —
     the :mod:`.spec` n-gram drafter proposes continuation tokens and one
     fused multi-token verify step commits the accepted prefix, emitted
-    tokens bit-identical to plain greedy decode).
+    tokens bit-identical to plain greedy decode).  :mod:`.sampling` adds
+    the stochastic tier on top: a seeded folded-key sampler
+    (temperature / top-k / top-p, batch-composition-independent), the
+    typed :class:`GenerationParams` request schema every handler parses
+    through, rejection-sampling speculative verification, and n>1
+    parallel candidates that fork a prefilled prompt's KV blocks.
   * :mod:`.service` — the Bebop-RPC ``Inference`` service.  ``Infer`` /
     ``InferStream`` / ``ScorePage`` speak fixed-layout pages in both
     directions (the host never parses a token) and compose under batch
@@ -39,6 +44,8 @@ from .kv_cache import (BlockAllocator, CacheOOM, PagedKVCache,  # noqa: F401
 from .router import (CircuitBreaker, InProcessReplica,  # noqa: F401
                      Replica, ReplicaRouter, RouterConfig,
                      build_router_server)
+from .sampling import (GREEDY, GenerationParams,  # noqa: F401
+                       SamplingParams, sample_tokens)
 from .service import (InferenceService, InferenceImpl,  # noqa: F401
                       build_server, decode_token_page, encode_prompt_page)
 from .spec import ngram_propose  # noqa: F401

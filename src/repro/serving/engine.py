@@ -39,6 +39,9 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import get_model
 from .kv_cache import CacheOOM, PagedKVCache, block_keys
+from .sampling import (GREEDY, GenerationParams, SamplingParams,
+                       rejection_sample, sample_tokens, spec_uniforms,
+                       target_probs)
 from .spec import ngram_propose
 
 _log = logging.getLogger(__name__)
@@ -49,7 +52,16 @@ class ServeConfig:
     max_batch: int = 8
     cache_len: int = 1024
     max_new_tokens: int = 64
+    # default sampling for requests that don't carry their own
+    # GenerationParams fields (serving/sampling.py): temperature 0 =
+    # greedy argmax (bit-identical to the pre-sampling engine), top_k 0 /
+    # top_p 1.0 disable the filters, seed feeds the per-request folded
+    # PRNG keys so sampled output is reproducible and independent of
+    # batch composition
     temperature: float = 0.0    # 0 = greedy
+    top_k: int = 0              # 0 = no top-k filter
+    top_p: float = 1.0          # 1.0 = no nucleus (top-p) filter
+    seed: int = 0               # base PRNG seed for sampled requests
     # paged KV cache (serving/kv_cache.py); paged=True routes supported
     # model families through PagedBatcher, others fall back to the dense
     # ContinuousBatcher automatically
@@ -144,15 +156,24 @@ class Engine:
     # -- generation --------------------------------------------------------------
     def generate(self, tokens: np.ndarray, *, max_new_tokens: Optional[int]
                  = None, stop_token: Optional[int] = None,
-                 deadline=None, start_from: int = 0,
-                 on_token=None) -> np.ndarray:
-        """Greedy generation.  tokens: [B, T] prompt.
+                 deadline=None, start_from: int = 0, on_token=None,
+                 sampling: Optional[SamplingParams] = None) -> np.ndarray:
+        """Greedy or sampled generation.  tokens: [B, T] prompt.
 
         ``start_from``: number of already-delivered tokens to skip (the RPC
         stream-cursor resume path: the handler re-generates deterministically
-        and skips past what the client already has).
+        and skips past what the client already has — sampled requests stay
+        resumable because the folded-key schedule makes their draws a pure
+        function of (seed, output index, row)).
+
+        ``sampling`` (default greedy) picks each token with
+        :func:`~repro.serving.sampling.sample_tokens`; row ``r`` of the
+        batch is candidate ``r`` of the key schedule, matching the paged
+        engine's fork numbering so paged and dense agree token-for-token
+        at the same seed.
         """
         cfg, sc = self.cfg, self.serve
+        sp = GREEDY if sampling is None else sampling
         maxn = sc.max_new_tokens if max_new_tokens is None else max_new_tokens
         b, t = tokens.shape
         batch = self._prefill_batch(tokens)
@@ -160,7 +181,7 @@ class Engine:
         self.stats["prefills"] += 1
         out: List[np.ndarray] = []
         pos = t
-        next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)[:, None]
+        next_tok = self._pick(logits, sp, 0)
         for i in range(maxn):
             if deadline is not None and deadline.expired():
                 break
@@ -172,13 +193,22 @@ class Engine:
                                          jnp.int32(pos))
             self.stats["decode_steps"] += 1
             pos += 1
-            next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)[:, None]
+            next_tok = self._pick(logits, sp, i + 1)
             if stop_token is not None and bool((next_tok == stop_token).all()):
                 break
         self.stats["tokens_out"] += sum(o.shape[1] for o in out) * b
         result = np.concatenate(out, axis=1) if out else \
             np.zeros((b, 0), np.int32)
         return result
+
+    @staticmethod
+    def _pick(logits, sp: SamplingParams, index: int) -> np.ndarray:
+        """Next token column [B, 1] — the original argmax lines when
+        greedy (bit-identical by construction), the seeded sampler
+        otherwise."""
+        if sp.greedy:
+            return np.asarray(jnp.argmax(logits, -1), np.int32)[:, None]
+        return sample_tokens(logits, sp, index=index)[:, None]
 
     def _prefill_batch(self, tokens: np.ndarray) -> Dict[str, Any]:
         cfg = self.cfg
@@ -219,6 +249,12 @@ class ShedError(RuntimeError):
     """Request dropped by the scheduler (queue overflow or expired deadline)."""
 
 
+def _config_sampling(sc: ServeConfig) -> SamplingParams:
+    """The ServeConfig-default sampling for requests that pass none."""
+    return SamplingParams(temperature=sc.temperature, top_k=sc.top_k,
+                          top_p=sc.top_p, seed=sc.seed)
+
+
 @dataclasses.dataclass(eq=False)   # identity semantics: queues/slot lists
 class _Pending:                    # look these up with `in` / `.remove()`,
     """One admitted request group: [B, T] prompt rows awaiting assembly."""
@@ -228,6 +264,7 @@ class _Pending:                    # look these up with `in` / `.remove()`,
     stop_token: Optional[int]
     deadline: Optional[Any]
     future: _cf.Future
+    sampling: SamplingParams = GREEDY
     enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
     cancelled: bool = False     # caller gone (connection died): stop paying
 
@@ -270,7 +307,7 @@ class ContinuousBatcher:
         self._closed = False  # guarded by _cond
         self.stats = {"requests": 0, "rows": 0, "batches": 0,
                       "batched_rows": 0, "shed": 0, "worker_errors": 0,
-                      "cancelled": 0}
+                      "cancelled": 0, "sampled_requests": 0}
         self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-batcher")
@@ -278,24 +315,56 @@ class ContinuousBatcher:
 
     # -- admission ----------------------------------------------------------
     def submit(self, tokens: np.ndarray, *,
+               params: Optional[GenerationParams] = None,
                max_new_tokens: Optional[int] = None,
                stop_token: Optional[int] = None,
                deadline=None, priority: Optional[int] = None,
                ttft_slo_ms: Optional[float] = None,
-               tpot_slo_ms: Optional[float] = None) -> _cf.Future:
+               tpot_slo_ms: Optional[float] = None,
+               sampling: Optional[SamplingParams] = None,
+               n: int = 1) -> _cf.Future:
         """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32.
 
+        ``params`` (a validated :class:`GenerationParams`) supplies every
+        per-request field at once and overrides the flat keyword
+        spellings, which are kept working for direct callers.
         ``priority``/``ttft_slo_ms``/``tpot_slo_ms`` are accepted for
         interface parity with :meth:`PagedBatcher.submit` and ignored:
         the dense scheduler has no preemption tier (a request's cache is
         a monolithic tensor, not swappable blocks), so priorities cannot
         change its FIFO shape-merging order.
+
+        ``sampling`` (default: the ServeConfig sampling fields) draws
+        each token with the seeded sampler; sampled requests are never
+        shape-merged with other requests, so their tokens stay
+        independent of batch composition.  ``n > 1`` (single-row prompt
+        only) generates n candidates by replicating the prompt across
+        the batch axis — the dense cache has no block sharing, so unlike
+        the paged fork this pays the prompt's KV n times, and a
+        ``stop_token`` ends the group only when every candidate has
+        emitted it (the dense lockstep rule).
         """
+        if params is not None:
+            params.validate()
+            max_new_tokens = params.max_new_tokens
+            stop_token = params.stop_token
+            sampling = params.sampling(self.engine.serve)
+            n = params.n
         del priority, ttft_slo_ms, tpot_slo_ms
         tokens = np.atleast_2d(np.asarray(tokens, dtype=np.int32))
+        sp = _config_sampling(self.engine.serve) if sampling is None \
+            else sampling
+        n = max(1, int(n))
+        if n > 1:
+            if tokens.shape[0] != 1:
+                raise ValueError(
+                    f"n={n} parallel sampling needs a single-row prompt, "
+                    f"got batch {tokens.shape[0]}")
+            tokens = np.repeat(tokens, n, axis=0)
         maxn = self.engine.serve.max_new_tokens if max_new_tokens is None \
             else max_new_tokens  # explicit 0 = prefill-only, not the default
-        p = _Pending(tokens, maxn, stop_token, deadline, _cf.Future())
+        p = _Pending(tokens, maxn, stop_token, deadline, _cf.Future(),
+                     sampling=sp)
         with self._cond:
             if self._closed:
                 self.stats["shed"] += 1
@@ -313,6 +382,8 @@ class ContinuousBatcher:
             self._queue.append(p)
             self.stats["requests"] += 1
             self.stats["rows"] += p.rows
+            if not sp.greedy:
+                self.stats["sampled_requests"] += 1
             self._cond.notify()
         return p.future
 
@@ -377,7 +448,11 @@ class ContinuousBatcher:
                         break  # deque mutated mid-iteration; rescan
                     if p.seq_len == head.seq_len \
                             and p.stop_token == head.stop_token \
+                            and head.sampling.greedy and p.sampling.greedy \
                             and rows + p.rows <= self.max_batch:
+                        # sampled requests run solo: merging would shift
+                        # their row indices in the shared batch and make
+                        # the emitted tokens depend on batch composition
                         found = p
                         break
                 if found is not None:
@@ -434,7 +509,8 @@ class ContinuousBatcher:
         try:
             out = self.engine.generate(tokens, max_new_tokens=maxn,
                                        stop_token=group[0].stop_token,
-                                       deadline=deadline)
+                                       deadline=deadline,
+                                       sampling=group[0].sampling)
         except Exception as e:  # noqa: BLE001 - fail every member, keep serving
             for p in group:
                 if not p.future.done():
@@ -496,6 +572,18 @@ class _PagedReq:                   # compare [B, T] arrays of mixed shapes
     future: _cf.Future
     rid: int
     on_token: Optional[Callable[[int, np.ndarray], None]] = None
+    sampling: SamplingParams = GREEDY
+    # n>1 parallel sampling: the request prefills as ONE row (one prompt
+    # allocation, prefix-cache eligible) and _fork() expands it to
+    # fork_n candidate rows sharing the prompt's blocks at the moment
+    # the first generated token is sampled
+    fork_n: int = 1
+    forked: bool = False
+    # per-candidate stop mask for forked requests (None otherwise): a
+    # candidate that samples stop_token freezes to stop-token padding
+    # while its siblings keep generating — clients trim each row at its
+    # first stop token
+    done: Optional[np.ndarray] = None
     enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
     # SLO-aware scheduling: priority class (higher preempts strictly
     # lower) and per-request latency targets in seconds (0 = no target)
@@ -518,6 +606,13 @@ class _PagedReq:                   # compare [B, T] arrays of mixed shapes
     @property
     def rows(self) -> int:
         return self.tokens.shape[0]
+
+    @property
+    def slots_needed(self) -> int:
+        """Batch slots the request will occupy at its widest: a pending
+        fork prefills as one row but must reserve ``fork_n`` slots up
+        front so the expansion never deadlocks on a full batch."""
+        return max(self.rows, self.fork_n)
 
     @property
     def seq_len(self) -> int:
@@ -584,6 +679,16 @@ class PagedBatcher:
     needs them back, so a hot system prompt's KV survives between
     requests.  ``stats["prefix_hits"]`` / ``stats["prefix_tokens_reused"]``
     / ``stats["cow_copies"]`` expose the cache's behavior.
+
+    Sampling rides the same steps: a request whose
+    :class:`~repro.serving.sampling.SamplingParams` has temperature > 0
+    draws each token through the seeded folded-key sampler (greedy
+    requests keep the historical argmax bit-for-bit), speculative
+    verification switches from exact-match to rejection sampling, and
+    ``submit(n=...)`` forks a prefilled prompt into n candidate rows
+    that share its KV blocks and diverge by copy-on-write
+    (:meth:`_fork`).  ``stats["sampled_requests"]`` / ``stats["forks"]``
+    / ``stats["spec_resamples"]`` expose the tier's behavior.
 
     Shedding happens at three points: on submit (queue full / already
     expired), at admission (expired in queue), and before each step
@@ -676,7 +781,8 @@ class PagedBatcher:
                       "spec_proposed": 0, "spec_accepted": 0,
                       "preemptions": 0, "swapped_blocks": 0, "swap_ins": 0,
                       "slo_violations": 0, "slo_adjustments": 0,
-                      "cancelled": 0}
+                      "cancelled": 0, "forks": 0, "spec_resamples": 0,
+                      "sampled_requests": 0}
         self._worker_error_logged = False
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="serve-paged-batcher")
@@ -689,7 +795,10 @@ class PagedBatcher:
                deadline=None, on_token=None,
                priority: Optional[int] = None,
                ttft_slo_ms: Optional[float] = None,
-               tpot_slo_ms: Optional[float] = None) -> _cf.Future:
+               tpot_slo_ms: Optional[float] = None,
+               params: Optional[GenerationParams] = None,
+               sampling: Optional[SamplingParams] = None,
+               n: int = 1) -> _cf.Future:
         """Queue a [B, T] (or [T]) prompt; resolves to [B, new] int32.
 
         ``on_token(index, tok)`` is invoked from the worker thread as each
@@ -697,6 +806,22 @@ class PagedBatcher:
         ``priority`` (higher wins; default ``ServeConfig.default_priority``)
         and the ``ttft_slo_ms``/``tpot_slo_ms`` latency targets (0 = no
         target; defaults from ServeConfig) drive the SLO-aware tier.
+
+        ``params`` (a validated :class:`~repro.serving.sampling.\
+GenerationParams`) supplies every per-request knob at once — the RPC
+        service hands it straight through; explicit keyword arguments
+        above win over fields it leaves ``None``.  ``sampling`` overrides
+        the ServeConfig-default :class:`SamplingParams` (temperature 0 =
+        greedy, the historical behavior).
+
+        ``n > 1`` requests **parallel sampling**: a single-row prompt is
+        prefilled ONCE, then forked into ``n`` candidate rows that
+        ``share()`` the prompt's KV blocks through the refcounted
+        allocator and diverge via copy-on-write from the first sampled
+        token — the future resolves to [n, new] int32.  Each candidate
+        stops independently: a row that samples ``stop_token`` freezes
+        to stop-token padding while its siblings continue, so clients
+        trim each row at its first stop token.
 
         Scheduling invariants the tests enforce:
 
@@ -717,7 +842,23 @@ class PagedBatcher:
           (finish, shed, error, preempt-then-shed), every block
           reference it held is released.
         """
+        if params is not None:
+            params.validate()
+            max_new_tokens = params.max_new_tokens
+            stop_token = params.stop_token
+            priority = params.priority
+            ttft_slo_ms = params.ttft_slo_ms
+            tpot_slo_ms = params.tpot_slo_ms
+            sampling = params.sampling(self.engine.serve)
+            n = params.n
         tokens = np.atleast_2d(np.asarray(tokens, dtype=np.int32))
+        sp = _config_sampling(self.engine.serve) if sampling is None \
+            else sampling
+        n = max(1, int(n))
+        if n > 1 and tokens.shape[0] != 1:
+            raise ValueError(
+                f"n={n} parallel sampling needs a single-row prompt, "
+                f"got batch {tokens.shape[0]}")
         maxn = self.engine.serve.max_new_tokens if max_new_tokens is None \
             else max_new_tokens  # explicit 0 = prefill-only
         pr = self.default_priority if priority is None else int(priority)
@@ -729,7 +870,8 @@ class PagedBatcher:
             self._next_rid += 1
             p = _PagedReq(tokens, maxn, stop_token, deadline, _cf.Future(),
                           self._next_rid, on_token, priority=pr,
-                          ttft_slo_s=ttft, tpot_slo_s=tpot)
+                          ttft_slo_s=ttft, tpot_slo_s=tpot,
+                          sampling=sp, fork_n=n)
             if p.seq_len == 0:
                 # reject at the door: an installed 0-token request has no
                 # prefill to run and no next_tok to feed — it would poison
@@ -753,6 +895,8 @@ class PagedBatcher:
             self._queue.append(p)
             self.stats["requests"] += 1
             self.stats["rows"] += p.rows
+            if not sp.greedy:
+                self.stats["sampled_requests"] += 1
             self._cond.notify()
         return p.future
 
@@ -829,7 +973,7 @@ class PagedBatcher:
                     p.future.set_exception(
                         ShedError("deadline expired in queue"))
                     continue
-                if p.rows > self.max_batch \
+                if p.slots_needed > self.max_batch \
                         or p.seq_len + max(p.max_new_tokens, 0) \
                         > self.cache.layout.tokens:
                     # doesn't fit the paged budget (too many rows, or the
@@ -837,8 +981,7 @@ class PagedBatcher:
                     # the dense path serves it with its own semantics
                     self._queue.remove(p)
                     return None, p
-                need = p.rows * self.cache.blocks_needed(
-                    p.seq_len + p.max_new_tokens)
+                need = self._blocks_need(p)
                 if need > self.cache.allocator.capacity:
                     # can NEVER fit this pool: shed now, don't wedge the
                     # queue behind an unsatisfiable request
@@ -848,7 +991,7 @@ class PagedBatcher:
                         f"request needs {need} KV blocks, pool capacity "
                         f"is {self.cache.allocator.capacity}"))
                     continue
-                if p.rows <= free_slots and need <= free_budget:
+                if p.slots_needed <= free_slots and need <= free_budget:
                     # free_budget counts idle prefix-cache blocks: a
                     # CacheOOM evicts them before shedding, and matched
                     # blocks are shared rather than consumed, so this
@@ -856,6 +999,22 @@ class PagedBatcher:
                     self._queue.remove(p)
                     return p, None
             return None, None
+
+    def _blocks_need(self, p: _PagedReq) -> int:
+        """Worst-case device blocks ``p`` needs over its lifetime.
+
+        Plain requests: every row pays its full prompt + generation
+        footprint.  Fork requests (``fork_n > 1``): one prompt footprint
+        plus, per extra candidate, the private tail past the shared
+        prompt blocks and one block for the copy-on-write of the shared
+        boundary block the candidate's first divergent write touches.
+        """
+        per_row = self.cache.blocks_needed(
+            p.seq_len + max(p.max_new_tokens, 0))
+        if p.fork_n > 1:
+            shared = min(-(-p.seq_len // self.cache.block_size), per_row)
+            return per_row + (p.fork_n - 1) * (per_row - shared + 1)
+        return per_row * p.rows
 
     def _admit(self) -> None:
         if self.swap:
@@ -913,7 +1072,7 @@ class PagedBatcher:
         back out — content makes the round trip unchanged — and the
         request stays parked.
         """
-        if req.rows > self._free_slots():
+        if req.slots_needed > self._free_slots():
             return False
         need = sum(self.cache.swapped_blocks((req.rid, r))
                    for r in range(req.rows))
@@ -929,7 +1088,7 @@ class PagedBatcher:
             return False
         req.tables = np.stack(tabs)
         for i in range(self.max_batch):
-            if len(req.slots) == req.rows:
+            if len(req.slots) == req.slots_needed:
                 break
             if self._slots[i] is None:
                 self._slots[i] = (req, len(req.slots))
@@ -959,11 +1118,10 @@ class PagedBatcher:
         best: Optional[Tuple[_PagedReq, int]] = None
         with self._cond:
             for p in self._queue:
-                if p.expired() or p.rows > self.max_batch:
+                if p.expired() or p.slots_needed > self.max_batch:
                     continue
                 try:
-                    need = p.rows * self.cache.blocks_needed(
-                        p.seq_len + max(p.max_new_tokens, 0))
+                    need = self._blocks_need(p)
                 except ValueError:
                     continue   # dense-fallback territory
                 if need > self.cache.allocator.capacity:
@@ -1044,10 +1202,13 @@ class PagedBatcher:
         """Oversized request: dense engine inline (rare escape hatch)."""
         self.stats["dense_fallbacks"] += 1
         try:
-            out = self.engine.generate(p.tokens,
+            toks = p.tokens if p.fork_n <= 1 \
+                else np.repeat(p.tokens, p.fork_n, axis=0)
+            out = self.engine.generate(toks,
                                        max_new_tokens=p.max_new_tokens,
                                        stop_token=p.stop_token,
-                                       deadline=p.deadline)
+                                       deadline=p.deadline,
+                                       sampling=p.sampling)
         except Exception as e:  # noqa: BLE001
             if not p.future.done():
                 p.future.set_exception(e)
@@ -1101,7 +1262,7 @@ class PagedBatcher:
             self.stats["prefix_hits"] += rows
             self.stats["prefix_tokens_reused"] += req.pos_next * rows
         for i in range(self.max_batch):
-            if len(req.slots) == rows:
+            if len(req.slots) == req.slots_needed:
                 break
             if self._slots[i] is None:
                 self._slots[i] = (req, len(req.slots))
@@ -1116,8 +1277,9 @@ class PagedBatcher:
         fully-matched block (prompt length a multiple of the block
         size); the scan itself is one refcount probe per touched block.
         """
-        if not self.prefix_enabled or adv <= 0 or req.tables is None:
-            return
+        if adv <= 0 or req.tables is None \
+                or not (self.prefix_enabled or req.forked):
+            return  # forks share blocks even with the prefix cache off
         for r in range(req.rows):
             for idx, src, dst in self.cache.ensure_private_range(
                     (req.rid, r), req.pos_next, adv):
@@ -1164,9 +1326,81 @@ class PagedBatcher:
             self.stats["prefill_chunks"] += 1
             req.pos_next += adv
             self._register_prefix(req)
-        req.next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self._finish_prefill(req, np.asarray(logits))
+
+    # -- prefill completion / n>1 fork --------------------------------------
+    def _finish_prefill(self, req: _PagedReq, logits: np.ndarray) -> None:
+        """Prompt fully written: fork (n>1), pick the first token, retire
+        if the request is already done.
+
+        ``logits`` holds one row per REAL row (a pending fork's single
+        prefill row); the fork broadcasts it to every candidate — they
+        share the prompt's distribution and diverge only through their
+        per-candidate sample draws.
+        """
+        logits = np.asarray(logits)
         if req.max_new_tokens <= 0 or req.expired():
             self._retire(req)
+            return
+        if req.fork_n > 1 and not req.forked:
+            try:
+                self._fork(req)
+            except CacheOOM as e:
+                self._retire(req, exc=e)
+                return
+            logits = np.broadcast_to(logits, (req.rows,) + logits.shape[1:])
+        req.next_tok = self._next_from(req, logits, 0)
+        if req.done is not None:
+            req.done |= req.next_tok == req.stop_token
+            req.next_tok = np.where(req.done, req.stop_token,
+                                    req.next_tok).astype(np.int32)
+            if bool(req.done.all()):
+                self._retire(req)
+
+    def _fork(self, req: _PagedReq) -> None:
+        """Expand a prefilled single-row request to ``fork_n`` candidate
+        rows that share its prompt blocks (refcounts, not copies).
+
+        Each extra candidate shares every block the prompt occupies —
+        including a partially-filled boundary block, which the row's
+        first divergent write copy-on-writes private — and allocates its
+        generation tail fresh.  On CacheOOM the rows already forked are
+        released so the request retires holding only its prefill row.
+        """
+        n = req.fork_n
+        tabs = [req.tables[0]]
+        try:
+            for r in range(1, n):
+                tabs.append(self.cache.fork((req.rid, 0), (req.rid, r),
+                                            shared_tokens=req.seq_len))
+        except CacheOOM:
+            for rr in range(1, len(tabs)):
+                self.cache.release((req.rid, rr))
+            raise
+        req.tables = np.stack(tabs)
+        req.tokens = np.repeat(req.tokens, n, axis=0)
+        if req.hist is not None:
+            req.hist = np.repeat(req.hist, n, axis=0)
+        if req.stop_token is not None:
+            # per-candidate stop: rows finish independently (unlike the
+            # lockstep multi-row prompt path)
+            req.done = np.zeros(n, bool)
+        req.forked = True
+        self.stats["forks"] += n - 1
+
+    def _next_from(self, req: _PagedReq, logits: np.ndarray,
+                   index: int) -> np.ndarray:
+        """Choose the token at output position ``index`` for every row.
+
+        Greedy keeps the historical pure-numpy argmax; sampled requests
+        draw through the folded-key schedule with candidate offset 0 —
+        row r of a forked request IS candidate r, so siblings see
+        distinct streams while the request's tokens stay independent of
+        batch composition.
+        """
+        if req.sampling.greedy:
+            return logits.argmax(-1).astype(np.int32)
+        return sample_tokens(logits, req.sampling, index=index)
 
     # -- scheduling ---------------------------------------------------------
     def _table_width(self, max_ctx: int) -> int:
@@ -1234,8 +1468,10 @@ class PagedBatcher:
         b = self.max_batch
         prefilling = [r for r in self._active if r.prefilling]
         decoding = [r for r in self._active if not r.prefilling]
-        n_decode = sum(len(r.slots) for r in decoding)
-        n_pf_rows = sum(len(r.slots) for r in prefilling)
+        # count REAL rows: a pending fork reserves fork_n slots but
+        # prefills as one row
+        n_decode = sum(r.rows for r in decoding)
+        n_pf_rows = sum(r.rows for r in prefilling)
         if self.max_step_tokens > 0:
             # budget NEW tokens this step: decode rows cost 1 each, the
             # remainder is split across prefilling rows
@@ -1262,7 +1498,7 @@ class PagedBatcher:
         decoding = [r for r in decoding if r in self._active]
         if not prefilling and not decoding:
             return
-        n_decode = sum(len(r.slots) for r in decoding)
+        n_decode = sum(r.rows for r in decoding)
         max_ctx = max([req.pos_next + advances[req.rid]
                        for req in prefilling]
                       + [req.pos_next + 1 for req in decoding])
@@ -1275,6 +1511,8 @@ class PagedBatcher:
             if slot is None:
                 continue
             req, r = slot
+            if r >= req.rows:
+                continue   # slot reserved for a not-yet-forked candidate
             tables[i] = req.tables[r][:m_used]
             if req.prefilling:
                 adv = advances[req.rid]
@@ -1300,11 +1538,11 @@ class PagedBatcher:
             req.pos_next += advances[req.rid]
             self._register_prefix(req)
             if not req.prefilling:
-                # prompt fully written: the chunk's last valid logits are
-                # the first generated token (same as blocking prefill)
-                req.next_tok = logits[req.slots].argmax(-1).astype(np.int32)
-                if req.max_new_tokens <= 0 or req.expired():
-                    self._retire(req)
+                # prompt fully written: the chunk's last valid logits
+                # pick the first generated token (same as blocking
+                # prefill) — and a fork request expands to its candidate
+                # rows here, sharing the prompt blocks just written
+                self._finish_prefill(req, logits[req.slots[:req.rows]])
 
     # -- speculative decode (draft-then-verify) -----------------------------
     def _draft(self, req: _PagedReq) -> Optional[np.ndarray]:
@@ -1318,6 +1556,11 @@ class PagedBatcher:
         speculative write inside the block table the request was
         admitted with (allocation covers seq_len + max_new_tokens).
         """
+        if req.fork_n > 1:
+            # forked candidates diverge row-by-row; lockstep acceptance
+            # would clamp every row to the weakest proposal, so forks
+            # decode plainly (they still batch with drafting requests)
+            return None
         budget = min(self.spec_len, req.max_new_tokens - len(req.out) - 1)
         if budget <= 0:
             return None
@@ -1412,39 +1655,102 @@ class PagedBatcher:
 
         ``logits[slot, j]`` scores the vocabulary after the row consumed
         chunk tokens 0..j, so the emitted sequence below replays the
-        sequential greedy loop exactly: each iteration emits one token
+        sequential decode loop exactly: each iteration emits one token
         and applies the same max_new_tokens-then-stop-token checks as
         :meth:`_advance_decode` — speculative decode changes how many
         loop iterations one device step funds, never their semantics.
+
+        Greedy requests keep exact-match acceptance (bit-identical to
+        plain decode).  Sampled requests verify by rejection sampling
+        (:func:`~repro.serving.sampling.rejection_sample`): draft token
+        j is accepted with probability min(1, p_target/p_draft) — the
+        n-gram drafter is deterministic, so p_draft is a point mass and
+        the test reduces to a seeded uniform against p_target[draft_j] —
+        and a rejected position resamples from the adjusted residual, so
+        the output distribution is identical to non-speculative
+        sampling (the realization may differ; at temperature 0 both
+        paths collapse to argmax and stay bit-identical).
         """
-        argm = logits[req.slots].argmax(-1).astype(np.int32)    # [R, C]
+        lx = logits[req.slots]                                  # [R, C, V]
         k = 0 if draft is None else draft.shape[1]
-        n_acc = 0   # lockstep rows: accept the prefix EVERY row accepts
-        while n_acc < k and bool((argm[:, n_acc] == draft[:, n_acc]).all()):
-            n_acc += 1
+        if req.sampling.greedy:
+            argm = lx.argmax(-1).astype(np.int32)               # [R, C]
+            n_acc = 0   # lockstep rows: accept the prefix EVERY row accepts
+            while n_acc < k \
+                    and bool((argm[:, n_acc] == draft[:, n_acc]).all()):
+                n_acc += 1
+            seq = [argm[:, j] for j in range(n_acc + 1)]
+        else:
+            n_acc, seq = self._rejection_advance(req, lx, draft, k)
         if k:
             self.stats["spec_proposed"] += k * req.rows
             self.stats["spec_accepted"] += n_acc * req.rows
         req.emit(req.next_tok.copy())
         req.pos_next += 1
-        j = 0
-        while True:
-            new = argm[:, j]    # the model's token after the last emitted
+        for j, new in enumerate(seq):
             if len(req.out) >= req.max_new_tokens:
                 self._retire(req)
                 return
-            if req.stop_token is not None \
+            if req.done is not None:
+                req.done |= new == req.stop_token
+                if bool(req.done.all()):
+                    self._retire(req)         # stop token not emitted
+                    return
+                new = np.where(req.done, req.stop_token,
+                               new).astype(np.int32)
+            elif req.stop_token is not None \
                     and bool((new == req.stop_token).all()):
                 self._retire(req)             # stop token not emitted
                 return
             if j < n_acc:
-                # verified: new == draft[:, j], K/V already resident
+                # verified: K/V for the token is already resident
                 req.emit(new.copy())
                 req.pos_next += 1
-                j += 1
             else:
                 req.next_tok = new.copy()     # first unverified token
                 return
+
+    def _rejection_advance(self, req: _PagedReq, lx: np.ndarray,
+                           draft: Optional[np.ndarray],
+                           k: int) -> Tuple[int, List[np.ndarray]]:
+        """Rejection-sample a verify step's chunk for a sampled request.
+
+        Returns ``(n_acc, seq)`` where ``seq`` holds the ``n_acc``
+        accepted draft columns plus the one token that follows them —
+        shaped exactly like the greedy path's output so
+        :meth:`_advance_spec` replays both identically.  Lockstep rows
+        commit the prefix every row accepts; a row that accepted further
+        simply keeps its own draft token at the cut, and a row that
+        rejected AT the cut takes its residual resample.  The non-draft
+        case (k = 0) and the all-accepted bonus token use the SAME
+        categorical draw plain decode would make at that output index,
+        so a sampled request's tokens do not depend on whether its
+        neighbors drafted.
+        """
+        rows = req.rows
+        base = len(req.out) + 1   # output index of the first chunk token
+        if k == 0:
+            return 0, [sample_tokens(lx[:, 0], req.sampling, index=base)]
+        probs = target_probs(lx[:, :k + 1], req.sampling)  # [R, k+1, V]
+        u = spec_uniforms(req.sampling, base_index=base, rows=rows,
+                          width=k + 1)
+        acc = np.zeros(rows, np.int32)
+        tok = np.zeros(rows, np.int32)
+        rej = np.zeros(rows, bool)
+        for r in range(rows):
+            acc[r], tok[r], rej[r] = rejection_sample(
+                probs[r], draft[r], u[r, :, 0], u[r, :, 1])
+        n_acc = int(acc.min())
+        if n_acc >= k:
+            # every draft accepted everywhere: the bonus token is a plain
+            # categorical draw from the position after the draft
+            pend = sample_tokens(lx[:, k], req.sampling, index=base + k)
+        else:
+            pend = np.where(acc > n_acc, draft[:, n_acc], tok) \
+                .astype(np.int32)
+            self.stats["spec_resamples"] += int(np.sum((acc == n_acc) & rej))
+        seq = [draft[:, j] for j in range(n_acc)] + [pend]
+        return n_acc, seq
 
     # -- decode -------------------------------------------------------------
     def _decode_step(self) -> None:
@@ -1476,17 +1782,32 @@ class PagedBatcher:
             self._advance_decode(req, logits)
 
     def _advance_decode(self, req: _PagedReq, logits: np.ndarray) -> None:
-        """Emit the fed token, pick the next one, retire if done."""
+        """Emit the fed token, pick the next one, retire if done.
+
+        Forked requests (``req.done`` set) stop per candidate: a row
+        that picks ``stop_token`` freezes — its later picks are forced
+        to the stop token, so the result pads with it — and the request
+        retires once EVERY candidate has stopped (before emitting the
+        all-stop column, so the lockstep trim in :meth:`_retire` never
+        fires for forks).
+        """
         req.emit(req.next_tok.copy())
         req.pos_next += 1
-        new = logits[req.slots].argmax(-1).astype(np.int32)
+        new = self._next_from(req, logits[req.slots], len(req.out))
         if len(req.out) >= req.max_new_tokens:
             self._retire(req)
+            return
+        if req.done is not None:
+            req.done |= new == req.stop_token
+            if bool(req.done.all()):
+                self._retire(req)             # stop token not emitted
+                return
+            new = np.where(req.done, req.stop_token, new).astype(np.int32)
         elif req.stop_token is not None \
                 and bool((new == req.stop_token).all()):
             self._retire(req)                 # stop token not emitted
-        else:
-            req.next_tok = new
+            return
+        req.next_tok = new
 
     # -- SLO accounting -----------------------------------------------------
     def _note_slo(self, req: _PagedReq) -> None:

@@ -630,6 +630,44 @@ class PagedKVCache:
             self._registered[owner] = upto
         return new
 
+    def fork(self, src: Hashable, dst: Hashable, *,
+             shared_tokens: int) -> np.ndarray:
+        """Clone ``src``'s table for new owner ``dst``, SHARING the blocks
+        that cover the first ``shared_tokens`` positions (refcount bumps,
+        zero copies) and allocating fresh private blocks for the rest of
+        the row.  Returns ``dst``'s padded table row.
+
+        This is the n>1 parallel-sampling fork: candidate rows share the
+        prompt's KV through the refcounted allocator and diverge via the
+        :meth:`ensure_private` copy-on-write path at their first private
+        write — only a partially-filled boundary block is ever copied,
+        and only once per candidate.  The generation tail is allocated
+        private up front (its content does not exist yet, so there is
+        nothing worth sharing).  All-or-nothing like :meth:`allocate`.
+
+        ``dst`` inherits ``src``'s prefix-key chain and registration
+        watermark (clamped to the shared region), so
+        :meth:`register_progress` and :meth:`release` treat a forked
+        candidate exactly like any other owner.
+        """
+        if dst in self._tables:
+            raise ValueError(f"owner {dst!r} already holds blocks")
+        blocks = self._tables[src]
+        n_shared = min(-(-max(shared_tokens, 0) // self.block_size),
+                       len(blocks))
+        for b in blocks[:n_shared]:
+            self.allocator.share(b, dst)
+        try:
+            private = self._reserve(len(blocks) - n_shared, dst)
+        except CacheOOM:
+            for b in reversed(blocks[:n_shared]):
+                self.allocator.drop(dst, b)
+            raise
+        self._tables[dst] = blocks[:n_shared] + private
+        self._keys[dst] = list(self._keys.get(src, []))
+        self._registered[dst] = min(self._registered.get(src, 0), n_shared)
+        return self.table_row(dst)
+
     def ensure_private(self, owner: Hashable, idx: int
                        ) -> Optional[Tuple[int, int]]:
         """Copy-on-write hook: if ``owner``'s table entry ``idx`` is

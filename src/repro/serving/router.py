@@ -38,8 +38,13 @@ The router is itself a Bebop-RPC server speaking the same
 ``InferenceService`` — clients cannot tell it from a single engine.  Its
 own ``Server``-level DedupCache keeps client-keyed retries exactly-once
 end to end; request payloads are forwarded as raw bytes (no re-encode on
-the proxy path).  ``Stats``/``Health`` are answered locally with router
-and per-replica counters.
+the proxy path).  That opacity is why schema growth is free here: the
+sampling fields (``temperature``/``top_k``/``top_p``/``seed``/``n``,
+serving/sampling.py:GenerationParams) ride through byte-identically
+with no router change — ``_affinity_key`` decodes only the leading
+prompt tokens, and every trailing field is replica business.
+``Stats``/``Health`` are answered locally with router and per-replica
+counters.
 """
 from __future__ import annotations
 

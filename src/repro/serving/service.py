@@ -50,6 +50,7 @@ from ..core.rpc import (Router, RpcContext, Server, Status, RpcError,
                         IDEMPOTENCY_KEY)
 from .engine import ContinuousBatcher, Engine, PagedBatcher, ShedError
 from .ingest import PageIngest
+from .sampling import GenerationParams, SamplingParams
 
 # -- wire types ----------------------------------------------------------------
 
@@ -70,6 +71,14 @@ GenerateRequest = T.Message("GenerateRequest", [
     T.Field("seq_len", T.UINT32, tag=3),
     T.Field("max_new_tokens", T.UINT32, tag=4),
     T.Field("stop_token", T.INT32, tag=5),
+    # sampling tier (absent -> ServeConfig defaults; temperature 0 =
+    # greedy; n > 1 = parallel candidates of a single-row prompt) —
+    # semantics in serving/sampling.py:GenerationParams
+    T.Field("temperature", T.FLOAT32, tag=6),
+    T.Field("top_k", T.UINT32, tag=7),
+    T.Field("top_p", T.FLOAT32, tag=8),
+    T.Field("seed", T.UINT32, tag=9),
+    T.Field("n", T.UINT32, tag=10),
 ])
 
 GenerateResponse = T.Message("GenerateResponse", [
@@ -104,6 +113,13 @@ InferRequest = T.Message("InferRequest", [
     T.Field("priority", T.INT32, tag=4),
     T.Field("ttft_slo_ms", T.FLOAT32, tag=5),
     T.Field("tpot_slo_ms", T.FLOAT32, tag=6),
+    # sampling tier, mirroring GenerateRequest (absent -> ServeConfig
+    # defaults) — semantics in serving/sampling.py:GenerationParams
+    T.Field("temperature", T.FLOAT32, tag=7),
+    T.Field("top_k", T.UINT32, tag=8),
+    T.Field("top_p", T.FLOAT32, tag=9),
+    T.Field("seed", T.UINT32, tag=10),
+    T.Field("n", T.UINT32, tag=11),
 ])
 
 InferResponse = T.Message("InferResponse", [
@@ -324,19 +340,10 @@ class InferenceImpl:
     def Infer(self, req: dict, ctx: RpcContext) -> dict:
         ctx.check_deadline()
         tokens = self._admit_tokens(req, ctx)
-        # absent field -> service default; explicit 0 -> prefill-only
-        maxn = int(req["max_new_tokens"]) if "max_new_tokens" in req else 16
-        stop = req.get("stop_token", -1)
-        fut = self.batcher.submit(
-            tokens, max_new_tokens=maxn,
-            stop_token=stop if stop >= 0 else None,
-            deadline=ctx.deadline,
-            # absent -> None -> the batcher's ServeConfig defaults apply
-            priority=(int(req["priority"]) if "priority" in req else None),
-            ttft_slo_ms=(float(req["ttft_slo_ms"])
-                         if "ttft_slo_ms" in req else None),
-            tpot_slo_ms=(float(req["tpot_slo_ms"])
-                         if "tpot_slo_ms" in req else None))
+        # one validator for every handler: absent-vs-explicit semantics
+        # live in GenerationParams' docstring, not per-handler `in` checks
+        gp = self._params(req, tokens)
+        fut = self.batcher.submit(tokens, params=gp, deadline=ctx.deadline)
         # If the caller's connection dies mid-call, cancel so the request's
         # KV blocks return to the pool instead of decoding for nobody —
         # UNLESS the call is idempotency-keyed: a keyed caller is coming
@@ -358,14 +365,26 @@ class InferenceImpl:
         return {"batch": out.shape[0], "new_tokens": out.shape[1],
                 "page": encode_gen_page(out) if out.shape[1] else b""}
 
+    def _params(self, req: dict, tokens: np.ndarray) -> GenerationParams:
+        """Validate the request's generation fields against its prompt."""
+        gp = GenerationParams.from_request(req)
+        if gp.n > 1 and tokens.shape[0] != 1:
+            raise RpcError(Status.INVALID_ARGUMENT,
+                           f"n={gp.n} parallel sampling needs a single-row "
+                           f"prompt, got batch {tokens.shape[0]}")
+        return gp
+
     def _token_stream(self, tokens: np.ndarray, maxn: int,
-                      stop_token: Optional[int],
-                      ctx: RpcContext) -> Iterator:
+                      stop_token: Optional[int], ctx: RpcContext, *,
+                      sampling: Optional[SamplingParams] = None) -> Iterator:
         """Yield (index, [B,1] tokens) AS the decode loop produces them.
 
         Generation runs on a worker thread feeding a queue, so each frame
         flushes the moment its decode step finishes — time-to-first-token
         is one prefill + one decode step, not the whole generation.
+        Sampled streams stay cursor-resumable: the folded-key schedule
+        makes each draw a pure function of (seed, output index, row), so
+        the resume path's regeneration replays them exactly.
         """
         q: _queue.Queue = _queue.Queue()
         cancelled = threading.Event()
@@ -384,7 +403,8 @@ class InferenceImpl:
                                      stop_token=stop_token,
                                      deadline=ctx.deadline,
                                      start_from=int(ctx.cursor),
-                                     on_token=on_token)
+                                     on_token=on_token,
+                                     sampling=sampling)
             except _Cancelled:
                 pass
             except BaseException as e:  # noqa: BLE001 - relayed to the caller
@@ -427,10 +447,14 @@ class InferenceImpl:
         deterministically and skips what the client already holds.
         """
         tokens = self._admit_tokens(req, ctx)
-        maxn = int(req.get("max_new_tokens", 16))
-        stop = req.get("stop_token", -1)
-        for i, tok in self._token_stream(tokens, maxn,
-                                         stop if stop >= 0 else None, ctx):
+        gp = self._params(req, tokens)
+        if gp.n > 1:
+            # streams bypass the batcher, so candidates replicate the
+            # prompt across rows here; each chunk's page carries n records
+            tokens = np.repeat(tokens, gp.n, axis=0)
+        for i, tok in self._token_stream(
+                tokens, gp.max_new_tokens, gp.stop_token, ctx,
+                sampling=gp.sampling(self.engine.serve)):
             ctx.set_cursor(i + 1)
             yield {"index": i, "page": encode_gen_page(tok),
                    "epoch": self.epoch}
@@ -458,11 +482,16 @@ class InferenceImpl:
             raise RpcError(Status.DEADLINE_EXCEEDED,
                            "deadline expired before prefill")
         tokens = _tokens_2d(req)
+        # (an explicit max_new_tokens=0 used to fall back to the engine
+        # default through `int(...) or None`; GenerationParams keeps it a
+        # prefill-only request, same as every other handler)
+        gp = self._params(req, tokens)
+        if gp.n > 1:
+            tokens = np.repeat(tokens, gp.n, axis=0)
         out = self.engine.generate(
-            tokens, max_new_tokens=int(req.get("max_new_tokens", 16)) or None,
-            stop_token=(req.get("stop_token")
-                        if req.get("stop_token", -1) >= 0 else None),
-            deadline=ctx.deadline)
+            tokens, max_new_tokens=gp.max_new_tokens,
+            stop_token=gp.stop_token, deadline=ctx.deadline,
+            sampling=gp.sampling(self.engine.serve))
         return {"tokens": out.reshape(-1).astype(np.uint32),
                 "batch": out.shape[0], "new_tokens": out.shape[1]}
 
@@ -470,11 +499,16 @@ class InferenceImpl:
         """Token streaming with frame-level cursor resumption (§7.5).
 
         cursor = number of tokens the client fully processed; on reconnect
-        the handler skips past them (generation is deterministic/greedy).
+        the handler skips past them (generation is deterministic: greedy,
+        or seeded sampling replayed through the folded-key schedule).
         """
         tokens = _tokens_2d(req)
-        maxn = int(req.get("max_new_tokens", 16))
-        for i, tok in self._token_stream(tokens, maxn, None, ctx):
+        gp = self._params(req, tokens)
+        if gp.n > 1:
+            tokens = np.repeat(tokens, gp.n, axis=0)
+        for i, tok in self._token_stream(
+                tokens, gp.max_new_tokens, None, ctx,
+                sampling=gp.sampling(self.engine.serve)):
             ctx.set_cursor(i + 1)  # next frame carries the position marker
             yield {"index": i, "tokens": tok.reshape(-1).astype(np.uint32),
                    "epoch": self.epoch}

@@ -15,8 +15,19 @@ the request's OWN history.  :func:`ngram_propose` looks up the most
 recent earlier occurrence of the current suffix n-gram in the
 prompt + generated tokens and proposes whatever followed it — pure
 numpy, microseconds, no device work.  Wrong proposals cost nothing but
-their slice of the verify step: the verifier's argmax is authoritative,
-so emitted tokens are bit-identical to non-speculative greedy decode.
+their slice of the verify step: for greedy requests the verifier's
+argmax is authoritative, so emitted tokens are bit-identical to
+non-speculative greedy decode.
+
+At temperature > 0 the verifier switches to **rejection sampling**
+(:func:`repro.serving.sampling.rejection_sample`): draft token j is
+accepted with probability min(1, p_target(x_j) / p_draft(x_j)) — this
+drafter proposes deterministically, so p_draft is a point mass and the
+test reduces to a seeded uniform against p_target(x_j) — and a rejected
+position resamples from the renormalized residual distribution.  The
+emitted tokens are then *distribution-identical* to non-speculative
+sampling (and still bit-identical at temperature 0, where both sides
+collapse to argmax); see ``PagedBatcher._rejection_advance``.
 """
 from __future__ import annotations
 

@@ -20,6 +20,10 @@ paged_attention.engine_mixed16.paged,900.0,tokens_per_s=80.0 speedup=3.10x
 paged_attention.mixed_admission.fused,120.0,p99=300us ratio=0.12x vs blocking
 paged_attention.shared_prefix.cached,500.0,speedup=6.00x ttft_p50=1.2ms prefix_hits=16 prefix_tokens_reused=8192 cow_copies=0
 paged_attention.spec_decode.on,700.0,tokens_per_s=500.0 speedup=1.80x accept_rate=0.95 spec_proposed=520 spec_accepted=492
+paged_attention.sampling.serial,9000.0,tokens_per_s=14.0 one dense sampled request at a time
+paged_attention.sampling.batched,3000.0,tokens_per_s=42.0 speedup=3.00x sampled_requests=16
+paged_attention.parallel_n.independent,5000.0,peak_blocks=20 4 separate submissions of one 64-token prompt
+paged_attention.parallel_n.forked,2000.0,block_ratio=2.50 peak_blocks=8 speedup=2.50x forks=3 cow_copies=4
 paged_attention.overload.shed_only,60000.0,goodput=3 of 11 reqs at a 0.35x-ref burst deadline
 paged_attention.overload.swap,80000.0,goodput=11 goodput_ratio=3.67x preemptions=4 swapped_blocks=20 swap_ins=4 slo_violations=0
 paged_attention.failover.baseline,900000.0,goodput=20.0 req_per_s completed=18 of 18 (3 replicas no failure)
@@ -77,6 +81,43 @@ def test_zero_acceptance_fails_even_with_speedup(tmp_path):
     failed = [r for r in results if not r.ok]
     assert len(failed) == 1
     assert "spec_accepted=0" in failed[0].detail
+
+
+def test_sampling_speedup_miss_fails(tmp_path):
+    bad = GOOD_ROWS.replace("speedup=3.00x sampled_requests",
+                            "speedup=1.05x sampled_requests")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert failed[0].gate == "seeded sampling throughput"
+    assert "1.05" in failed[0].detail and "1.2" in failed[0].detail
+
+
+def test_sampling_zero_sampled_requests_fails(tmp_path):
+    # a speedup with nothing sampled means the workload degenerated to
+    # greedy (e.g. a default temperature of 0 leaked through)
+    bad = GOOD_ROWS.replace("sampled_requests=16", "sampled_requests=0")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert "sampled_requests=0" in failed[0].detail
+
+
+def test_parallel_n_block_ratio_miss_fails(tmp_path):
+    bad = GOOD_ROWS.replace("block_ratio=2.50", "block_ratio=1.10")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert failed[0].gate == "parallel sampling KV sharing"
+    assert "1.10" in failed[0].detail and "1.5" in failed[0].detail
+
+
+def test_parallel_n_zero_forks_fails_even_with_ratio(tmp_path):
+    bad = GOOD_ROWS.replace("forks=3", "forks=0")
+    results = cg.check(cg.parse_rows(_write(tmp_path, bad)))
+    failed = [r for r in results if not r.ok]
+    assert len(failed) == 1
+    assert "forks=0" in failed[0].detail
 
 
 def test_overload_ratio_miss_fails(tmp_path):

@@ -1,0 +1,531 @@
+"""The stochastic sampling tier: seeded draws, forks, rejection sampling.
+
+Four contracts, each pinned here because a regression would be silent:
+
+* **Determinism.**  A sampled request's tokens are a pure function of
+  (seed, output index, candidate) — never of batch composition, the
+  dense/paged split, or n (candidate 0 of a fork equals a solo run).
+* **Greedy bit-identity.**  temperature 0 routes through the engine's
+  original argmax lines, so the pre-sampling outputs are reproduced
+  exactly, on every path.
+* **Fork economics.**  n>1 candidates share the prompt's KV blocks
+  through the refcounted allocator and diverge by copy-on-write; each
+  candidate stops independently.
+* **Distribution-correct speculation.**  Rejection-sampled verification
+  emits the target distribution's marginal at every position (chi-squared
+  checked), collapsing to exact-match at temperature 0.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.rpc import Channel, RpcError, Status, connected_pair
+from repro.serving import (ContinuousBatcher, Engine, GenerationParams,
+                           PagedBatcher, SamplingParams, ServeConfig,
+                           build_server)
+from repro.serving.sampling import (rejection_sample, sample_tokens,
+                                    spec_uniforms, target_probs)
+from repro.serving.service import InferenceService
+
+SP = SamplingParams(temperature=0.8, top_p=0.9, seed=42)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("qwen2-1.5b"))
+    engine = Engine(cfg, ServeConfig(cache_len=96, max_new_tokens=8,
+                                     max_batch=8, prefill_chunk=16,
+                                     spec_decode=False, prefix_cache=False))
+    yield cfg, engine
+
+
+def _prompt(cfg, b=1, t=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, (b, t)).astype(np.int32)
+
+
+# -- SamplingParams / the sampler itself --------------------------------------
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_target_probs_top_k_oracle():
+    # logits [0,1,2,3] at temperature 1, top_k=2: mass on tokens {2,3}
+    logits = np.array([[0.0, 1.0, 2.0, 3.0]])
+    p = target_probs(logits, SamplingParams(temperature=1.0, top_k=2))[0]
+    assert p[0] == 0.0 and p[1] == 0.0
+    expect = np.exp([2.0, 3.0]) / np.exp([2.0, 3.0]).sum()
+    np.testing.assert_allclose(p[2:], expect, rtol=1e-12)
+
+
+def test_target_probs_top_p_oracle():
+    # softmax = [0.5, 0.3, 0.15, 0.05]; top_p=0.7 keeps the tokens whose
+    # EXCLUSIVE prefix mass is < 0.7: {0 (0.0), 1 (0.5)}, drops 2 (0.8)
+    base = np.log(np.array([0.5, 0.3, 0.15, 0.05]))
+    p = target_probs(base[None], SamplingParams(temperature=1.0, top_p=0.7))[0]
+    assert p[2] == 0.0 and p[3] == 0.0
+    np.testing.assert_allclose(p[:2], [0.5 / 0.8, 0.3 / 0.8], rtol=1e-12)
+
+
+def test_target_probs_top_p_one_keeps_everything():
+    logits = np.random.default_rng(0).normal(size=(3, 16))
+    p = target_probs(logits, SamplingParams(temperature=0.7))
+    assert (p > 0).all()
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-9)
+
+
+def test_sample_tokens_greedy_is_argmax():
+    logits = np.random.default_rng(1).normal(size=(4, 32)).astype(np.float32)
+    got = sample_tokens(logits, SamplingParams(), index=5)
+    np.testing.assert_array_equal(got, logits.argmax(-1))
+
+
+def test_sample_tokens_pure_in_seed_index_candidate():
+    logits = np.random.default_rng(2).normal(size=(1, 256)).astype(np.float32)
+    a = [int(sample_tokens(logits, SP, index=i)[0]) for i in range(20)]
+    b = [int(sample_tokens(logits, SP, index=i)[0]) for i in range(20)]
+    assert a == b                       # same schedule, same tokens
+    assert len(set(a)) > 1              # ...but the draws do vary by index
+    other = [int(sample_tokens(logits, SamplingParams(
+        temperature=0.8, top_p=0.9, seed=43), index=i)[0])
+        for i in range(20)]
+    assert a != other                   # and by seed
+
+
+def test_sample_tokens_respects_top_k_support():
+    logits = np.random.default_rng(3).normal(size=(1, 128)).astype(np.float32)
+    sp = SamplingParams(temperature=1.5, top_k=4, seed=9)
+    top4 = set(np.argsort(-logits[0])[:4].tolist())
+    for i in range(40):
+        assert int(sample_tokens(logits, sp, index=i)[0]) in top4
+
+
+def test_uniform_schedule_candidate_prefix_invariance():
+    # row r's uniforms are independent of how many candidates were asked
+    # for — the property that makes fork candidate 0 equal a solo run
+    u1 = spec_uniforms(SP, base_index=0, rows=1, width=8)
+    u4 = spec_uniforms(SP, base_index=0, rows=4, width=8)
+    np.testing.assert_array_equal(u4[:1], u1)
+    # pure across calls and across the window boundary at index 64
+    uw = spec_uniforms(SP, base_index=60, rows=2, width=8)
+    np.testing.assert_array_equal(
+        uw, spec_uniforms(SP, base_index=60, rows=2, width=8))
+    assert ((0 <= uw) & (uw < 1)).all()
+
+
+# -- rejection sampling -------------------------------------------------------
+
+def _chi2(counts, probs):
+    n = counts.sum()
+    expect = probs * n
+    mask = expect > 0
+    return float(((counts[mask] - expect[mask]) ** 2 / expect[mask]).sum())
+
+
+def test_rejection_sample_marginal_distribution():
+    """The emitted token at a drafted position is ~ target p (SpecInfer).
+
+    Chi-squared over 8 outcomes at 20k trials; the 0.001 critical value
+    for df=7 is 24.32.  The uniforms come from a fixed-seed rng, so the
+    test is deterministic.
+    """
+    rng = np.random.default_rng(11)
+    v = 8
+    p0 = rng.dirichlet(np.ones(v))
+    p1 = rng.dirichlet(np.ones(v))
+    probs = np.stack([p0, p1])
+    draft = np.array([int(p0.argmax())])   # what an n-gram drafter would bet
+    counts = np.zeros(v, np.int64)
+    trials = 20_000
+    for _ in range(trials):
+        u = rng.random((2, 2))
+        n_acc, tok, _ = rejection_sample(probs, draft, u[:, 0], u[:, 1])
+        counts[int(draft[0]) if n_acc >= 1 else tok] += 1
+    assert _chi2(counts, p0) < 24.32, f"marginal != target: {counts}"
+
+
+def test_rejection_sample_accept_rate_matches_p_draft():
+    rng = np.random.default_rng(13)
+    v = 8
+    p0 = rng.dirichlet(np.ones(v))
+    draft = np.array([3])
+    acc = sum(rejection_sample(np.stack([p0, p0]), draft,
+                               rng.random(2), rng.random(2))[0] >= 1
+              for _ in range(20_000))
+    assert abs(acc / 20_000 - p0[3]) < 0.02
+
+
+def test_rejection_sample_greedy_point_mass():
+    # temperature 0's filtered target is a point mass: accept iff the
+    # draft IS the argmax, resample to the argmax otherwise — the exact
+    # match loop the greedy engine keeps
+    p = np.zeros(8)
+    p[5] = 1.0
+    probs = np.stack([p, p])
+    n_acc, tok, res = rejection_sample(probs, np.array([5]),
+                                       np.array([0.99, 0.5]),
+                                       np.array([0.5, 0.5]))
+    assert n_acc == 1 and tok == 5
+    n_acc, tok, res = rejection_sample(probs, np.array([2]),
+                                       np.array([0.0, 0.5]),
+                                       np.array([0.5, 0.5]))
+    assert n_acc == 0 and tok == 5 and res
+
+
+def test_rejection_sample_never_emits_filtered_token():
+    # zero-probability draft tokens are always rejected, and the residual
+    # can only land inside the target's support
+    rng = np.random.default_rng(17)
+    p = np.array([0.6, 0.4, 0.0, 0.0])
+    probs = np.stack([p, p])
+    for _ in range(200):
+        n_acc, tok, _ = rejection_sample(probs, np.array([2]),
+                                         rng.random(2), rng.random(2))
+        assert n_acc == 0 and tok in (0, 1)
+
+
+# -- engine determinism -------------------------------------------------------
+
+def test_temperature_zero_bit_identical_to_greedy(setup):
+    cfg, engine = setup
+    p = _prompt(cfg, t=10, seed=20)
+    legacy = engine.generate(p, max_new_tokens=6)
+    explicit = engine.generate(p, max_new_tokens=6,
+                               sampling=SamplingParams())
+    np.testing.assert_array_equal(legacy, explicit)
+    b = PagedBatcher(engine, max_batch=4)
+    paged = b.generate(p, max_new_tokens=6, sampling=SamplingParams())
+    b.close()
+    np.testing.assert_array_equal(legacy, paged)
+
+
+def test_sampled_paged_equals_dense_and_batch_independent(setup):
+    cfg, engine = setup
+    p = _prompt(cfg, t=12, seed=21)
+    dense = engine.generate(p, max_new_tokens=6, sampling=SP)
+    assert not np.array_equal(
+        dense, engine.generate(p, max_new_tokens=6)), \
+        "sampling degenerated to greedy"
+    b = PagedBatcher(engine, max_batch=8)
+    alone = b.generate(p, max_new_tokens=6, sampling=SP)
+    np.testing.assert_array_equal(alone, dense)
+    # same request inside a full batch of unrelated traffic
+    others = [b.submit(_prompt(cfg, t=t, seed=t), max_new_tokens=6)
+              for t in (5, 9, 17)]
+    mixed = b.generate(p, max_new_tokens=6, sampling=SP)
+    for f in others:
+        f.result(timeout=300)
+    b.close()
+    np.testing.assert_array_equal(mixed, dense)
+
+
+def test_sampled_run_reproducible_across_batchers(setup):
+    cfg, engine = setup
+    p = _prompt(cfg, t=9, seed=22)
+    outs = []
+    for _ in range(2):
+        b = PagedBatcher(engine, max_batch=4)
+        outs.append(b.generate(p, max_new_tokens=8, sampling=SP))
+        b.close()
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# -- n>1 parallel sampling ----------------------------------------------------
+
+def test_fork_candidate_zero_matches_solo_run(setup):
+    cfg, engine = setup
+    p = _prompt(cfg, t=12, seed=23)
+    b = PagedBatcher(engine, max_batch=8)
+    solo = b.generate(p, max_new_tokens=6, sampling=SP)
+    forked = b.generate(p, max_new_tokens=6, sampling=SP, n=3)
+    b.close()
+    assert forked.shape == (3, 6)
+    np.testing.assert_array_equal(forked[:1], solo)
+    assert not np.array_equal(forked[1], forked[0]), "candidates identical"
+    assert not np.array_equal(forked[2], forked[1]), "candidates identical"
+
+
+def test_fork_greedy_candidates_all_identical(setup):
+    cfg, engine = setup
+    p = _prompt(cfg, t=10, seed=24)
+    ref = engine.generate(p, max_new_tokens=5)
+    b = PagedBatcher(engine, max_batch=4)
+    forked = b.generate(p, max_new_tokens=5, n=4)
+    b.close()
+    for r in range(4):
+        np.testing.assert_array_equal(forked[r:r + 1], ref)
+
+
+def test_fork_shares_prompt_blocks(setup):
+    """A block-aligned 32-token prompt forked 4 ways holds 2 shared
+    blocks + 4 private tails at the first token — not 4 x 3 blocks."""
+    cfg, engine = setup
+    p = _prompt(cfg, t=32, seed=25)
+    b = PagedBatcher(engine, max_batch=4)
+    total = b.cache.layout.num_blocks
+    free_before = b.cache.num_free_blocks
+    used_at_first = []
+
+    def hook(idx, tok):
+        if idx == 0:
+            used_at_first.append(total - b.cache.num_free_blocks)
+
+    out = b.submit(p, max_new_tokens=8, sampling=SP, n=4,
+                   on_token=hook).result(timeout=300)
+    assert out.shape == (4, 8)
+    assert used_at_first and used_at_first[0] <= 2 + 4 + 1, \
+        f"fork did not share prompt blocks: {used_at_first[0]} used"
+    assert b.cache.num_free_blocks == free_before, "blocks leaked"
+    assert b.stats["forks"] == 3
+    b.close()
+
+
+def test_fork_unaligned_prompt_diverges_by_cow(setup):
+    """With a partial boundary block the candidates' first divergent
+    writes copy-on-write it instead of corrupting their siblings."""
+    cfg, engine = setup
+    p = _prompt(cfg, t=24, seed=26)   # 1.5 blocks at block_size 16
+    b = PagedBatcher(engine, max_batch=4)
+    solo = b.generate(p, max_new_tokens=8, sampling=SP)
+    before = b.stats["cow_copies"]
+    forked = b.generate(p, max_new_tokens=8, sampling=SP, n=3)
+    assert b.stats["cow_copies"] > before, "boundary block never CoW'd"
+    b.close()
+    np.testing.assert_array_equal(forked[:1], solo)
+
+
+def test_fork_per_candidate_stop(setup):
+    """A candidate that samples the stop token freezes to stop padding
+    while its siblings keep decoding to their own ends."""
+    cfg, engine = setup
+    p = _prompt(cfg, t=12, seed=27)
+    b = PagedBatcher(engine, max_batch=4)
+    free_ref = b.generate(p, max_new_tokens=8, sampling=SP, n=3)
+    # pick a token only candidate 0 ever emits, mid-sequence, so the
+    # rerun stops row 0 alone and the siblings must be untouched
+    stop = None
+    for j in range(2, 7):
+        tok = int(free_ref[0, j])
+        if tok not in free_ref[1] and tok not in free_ref[2] \
+                and tok not in free_ref[0, :j]:
+            stop, stop_j = tok, j
+            break
+    assert stop is not None, f"no unique candidate-0 token in {free_ref}"
+    stopped = b.generate(p, max_new_tokens=8, sampling=SP, n=3,
+                         stop_token=stop)
+    b.close()
+    # row 0: identical up to and including its stop token, padding after
+    np.testing.assert_array_equal(stopped[0, :stop_j + 1],
+                                  free_ref[0, :stop_j + 1])
+    assert (stopped[0, stop_j:] == stop).all()
+    # siblings: bit-identical to the stop-free run
+    np.testing.assert_array_equal(stopped[1:], free_ref[1:])
+
+
+def test_fork_on_dense_batcher_matches_paged(setup):
+    cfg, engine = setup
+    p = _prompt(cfg, t=10, seed=28)
+    pb = PagedBatcher(engine, max_batch=4)
+    paged = pb.generate(p, max_new_tokens=6, sampling=SP, n=3)
+    pb.close()
+    db = ContinuousBatcher(engine, max_batch=4, window_s=0.01)
+    dense = db.generate(p, max_new_tokens=6, sampling=SP, n=3)
+    db.close()
+    np.testing.assert_array_equal(paged, dense)
+
+
+def test_fork_multirow_prompt_rejected(setup):
+    cfg, engine = setup
+    b = PagedBatcher(engine, max_batch=4)
+    with pytest.raises(ValueError):
+        b.submit(_prompt(cfg, b=2, t=8, seed=29), max_new_tokens=4, n=2)
+    b.close()
+
+
+# -- speculative decoding at temperature > 0 ----------------------------------
+
+def test_spec_sampled_deterministic_with_acceptance(setup):
+    """Near-greedy sampled decode over a repetitive prompt: the drafter
+    fires, rejection-sampling verification runs, and the whole pipeline
+    stays seeded-deterministic across fresh batchers."""
+    cfg, _ = setup
+    engine = Engine(cfg, ServeConfig(cache_len=96, max_new_tokens=24,
+                                     max_batch=4, prefill_chunk=16,
+                                     spec_decode=True, spec_len=8,
+                                     prefix_cache=False))
+    motif = np.random.default_rng(31).integers(
+        0, cfg.vocab_size, 6).astype(np.int32)
+    p = np.tile(motif, 4)[None, :]
+    sp = SamplingParams(temperature=0.05, seed=3)
+    outs, spec_steps = [], []
+    for _ in range(2):
+        b = PagedBatcher(engine, max_batch=4)
+        outs.append(b.generate(p, max_new_tokens=24, sampling=sp))
+        spec_steps.append(b.stats["spec_steps"])
+        b.close()
+    np.testing.assert_array_equal(outs[0], outs[1])
+    assert spec_steps[0] > 0, "drafter never fired on repetitive traffic"
+
+
+def test_spec_greedy_still_bit_identical(setup):
+    cfg, engine = setup
+    spec_eng = Engine(cfg, ServeConfig(cache_len=96, max_new_tokens=24,
+                                       max_batch=4, prefill_chunk=16,
+                                       spec_decode=True, spec_len=8,
+                                       prefix_cache=False))
+    motif = np.random.default_rng(37).integers(
+        0, cfg.vocab_size, 6).astype(np.int32)
+    p = np.tile(motif, 4)[None, :]
+    ref = engine.generate(p, max_new_tokens=24)
+    b = PagedBatcher(spec_eng, max_batch=4)
+    got = b.generate(p, max_new_tokens=24)
+    assert b.stats["spec_accepted"] > 0
+    b.close()
+    np.testing.assert_array_equal(ref, got)
+
+
+# -- GenerationParams ---------------------------------------------------------
+
+def test_generation_params_absent_vs_explicit():
+    gp = GenerationParams.from_request({}, default_max_new=16)
+    assert gp.max_new_tokens == 16 and gp.temperature is None
+    assert gp.stop_token is None and gp.n == 1
+    gp = GenerationParams.from_request(
+        {"max_new_tokens": 0, "temperature": 0.0, "seed": 0})
+    assert gp.max_new_tokens == 0       # explicit 0 = prefill-only
+    assert gp.temperature == 0.0        # explicit 0.0 = forced greedy
+    assert gp.seed == 0                 # a real seed, not "absent"
+    # the wire's negative stop sentinel decodes to "no stop token"
+    assert GenerationParams.from_request({"stop_token": -1}).stop_token is None
+    assert GenerationParams.from_request({"stop_token": 7}).stop_token == 7
+
+
+def test_generation_params_validation_errors():
+    for bad in ({"top_p": 0.0}, {"top_p": 1.5}, {"temperature": -1.0},
+                {"top_k": -2}, {"n": 0}, {"max_new_tokens": -1}):
+        with pytest.raises(RpcError) as ei:
+            GenerationParams.from_request(bad)
+        assert ei.value.code == Status.INVALID_ARGUMENT
+
+
+def test_generation_params_resolve_against_config():
+    sc = ServeConfig(temperature=0.6, top_k=5, top_p=0.8, seed=99)
+    sp = GenerationParams.from_request({}).sampling(sc)
+    assert sp == SamplingParams(temperature=0.6, top_k=5, top_p=0.8, seed=99)
+    sp = GenerationParams.from_request(
+        {"temperature": 0.0, "seed": 1}).sampling(sc)
+    assert sp.greedy and sp.seed == 1 and sp.top_k == 5
+
+
+def test_generation_params_through_paged_submit(setup):
+    cfg, engine = setup
+    b = PagedBatcher(engine, max_batch=4)
+    gp = GenerationParams(temperature=0.8, top_p=0.9, seed=42,
+                          max_new_tokens=6, n=2)
+    out = b.submit(_prompt(cfg, t=12, seed=21), params=gp).result(timeout=300)
+    direct = b.generate(_prompt(cfg, t=12, seed=21), max_new_tokens=6,
+                        sampling=SP, n=2)
+    b.close()
+    np.testing.assert_array_equal(out, direct)
+
+
+# -- the RPC service and router ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def served(setup):
+    cfg, engine = setup
+    server = build_server(engine)
+    ct, st = connected_pair()
+    server.serve_transport(st, blocking=False)
+    ch = Channel(ct)
+    yield cfg, engine, ch.typed(InferenceService)
+    ch.close()
+
+
+def test_service_legacy_flat_request_unchanged(setup, served):
+    cfg, engine, inf = served
+    p = _prompt(cfg, t=8, seed=40)
+    req = {"tokens": p.reshape(-1).astype(np.uint32), "batch": 1,
+           "seq_len": 8, "max_new_tokens": 4}
+    res = inf.Generate(dict(req))
+    assert list(res["tokens"]) == list(inf.Generate(dict(req))["tokens"])
+    ref = engine.generate(p, max_new_tokens=4)
+    assert [int(x) for x in res["tokens"]] == ref.reshape(-1).tolist()
+
+
+def test_service_sampled_generate_with_n(setup, served):
+    cfg, engine, inf = served
+    p = _prompt(cfg, t=8, seed=41)
+    req = {"tokens": p.reshape(-1).astype(np.uint32), "batch": 1,
+           "seq_len": 8, "max_new_tokens": 6, "temperature": 0.8,
+           "top_p": 0.9, "seed": 42, "n": 3}
+    res = inf.Generate(dict(req))
+    assert res["batch"] == 3 and res["new_tokens"] == 6
+    again = inf.Generate(dict(req))
+    assert list(res["tokens"]) == list(again["tokens"])
+    # candidate rows match the engine's own fork numbering
+    ref = engine.generate(np.repeat(p, 3, axis=0), max_new_tokens=6,
+                          sampling=SP)
+    assert [int(x) for x in res["tokens"]] == ref.reshape(-1).tolist()
+
+
+def test_service_explicit_zero_max_new_is_prefill_only(setup, served):
+    cfg, engine, inf = served
+    p = _prompt(cfg, t=8, seed=42)
+    res = inf.Generate({"tokens": p.reshape(-1).astype(np.uint32),
+                        "batch": 1, "seq_len": 8, "max_new_tokens": 0})
+    assert res["new_tokens"] == 0 and len(res["tokens"]) == 0
+
+
+def test_service_invalid_params_rejected(setup, served):
+    cfg, engine, inf = served
+    p = _prompt(cfg, t=8, seed=43)
+    base = {"tokens": p.reshape(-1).astype(np.uint32), "batch": 1,
+            "seq_len": 8, "max_new_tokens": 4}
+    for extra in ({"top_p": 1.5}, {"n": 0}):
+        with pytest.raises(RpcError) as ei:
+            inf.Generate({**base, **extra})
+        assert ei.value.code == Status.INVALID_ARGUMENT
+    # n>1 needs a single-row prompt
+    two = _prompt(cfg, b=2, t=8, seed=44)
+    with pytest.raises(RpcError) as ei:
+        inf.Generate({"tokens": two.reshape(-1).astype(np.uint32),
+                      "batch": 2, "seq_len": 8, "max_new_tokens": 4,
+                      "temperature": 0.8, "n": 2})
+    assert ei.value.code == Status.INVALID_ARGUMENT
+
+
+def test_router_passes_sampling_fields_byte_transparently(setup):
+    """The router proxies raw bytes: a sampled n=3 Generate through the
+    front door equals the same request against the engine directly."""
+    cfg, engine = setup
+    from repro.serving import InProcessReplica
+    from repro.serving.router import RouterConfig, build_router_server
+
+    reps = [InProcessReplica(engine, f"samp{i}") for i in range(2)]
+    server, router = build_router_server(reps, RouterConfig(hedge=False))
+    ct, st = connected_pair()
+    server.serve_transport(st, blocking=False)
+    inf = Channel(ct).typed(InferenceService)
+    p = _prompt(cfg, t=8, seed=45)
+    res = inf.Generate({"tokens": p.reshape(-1).astype(np.uint32),
+                        "batch": 1, "seq_len": 8, "max_new_tokens": 6,
+                        "temperature": 0.8, "top_p": 0.9, "seed": 42,
+                        "n": 3})
+    router.close()
+    for r in reps:
+        r.kill()
+    assert res["batch"] == 3
+    ref = engine.generate(np.repeat(p, 3, axis=0), max_new_tokens=6,
+                          sampling=SP)
+    assert [int(x) for x in res["tokens"]] == ref.reshape(-1).tolist()
